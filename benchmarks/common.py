@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: CPU wall timing + modeled v5e time + CSV rows.
+
+Every row reports:
+  us_per_call — median wall time of the jit'd kernel on THIS CPU (interpret
+                mode; reported for transparency, not used for claims)
+  derived     — modeled TPU-v5e microseconds from core/analysis.py (the
+                LSU/DMA pipeline model; the quantity the paper-trend
+                validation uses)
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS: list[dict] = []
+
+
+def wall_us(fn: Callable, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived_us: float, **extra):
+    row = {"name": name, "us_per_call": round(us_per_call, 1),
+           "derived": round(derived_us, 2), **extra}
+    ROWS.append(row)
+    extras = ",".join(f"{k}={v}" for k, v in extra.items())
+    print(f"{name},{row['us_per_call']},{row['derived']}"
+          + (f",{extras}" if extras else ""))
+    return row

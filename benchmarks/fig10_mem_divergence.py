@@ -1,0 +1,73 @@
+"""Paper Fig. 10 analog: memory-access type (direct/indirect) x control-flow
+divergence, best config per optimization family."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+from repro.kernels import ops
+from benchmarks.common import wall_us, emit
+
+N_MODEL = 1 << 26
+N = 1 << 15
+
+# (variant, divergence_paths, uniform?, bounded_trip)
+VARIANTS = [
+    ("base", 1, False, 1.0),
+    ("if_id", 2, True, 1.0),
+    ("if_in", 2, False, 1.0),
+    ("for_const_if_id", 2, True, 1.0),
+    ("for_in_if_in", 2, False, 1.6),     # worst-case bounded trips
+]
+FAMS = ["con", "gap", "pipe"]
+DEGREES = (2, 4, 8)
+
+
+def _best(fam: str, **kw):
+    best = None
+    for d in DEGREES:
+        cfg = CoarseningConfig.parse(f"{fam}{d}")
+        plan = plan_stream(N_MODEL, cfg, block=1024)
+        if "hit_rate" in kw:
+            c = A.gather_cost(plan, **kw)
+        else:
+            c = A.stream_cost(plan, **kw)
+        if best is None or c.modeled_s < best[1].modeled_s:
+            best = (d, c)
+    return best
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    inputs = tuple(jax.random.normal(jax.random.fold_in(key, i), (N,))
+                   for i in range(8))
+    for variant, paths, uniform, trips in VARIANTS:
+        base_direct = A.stream_cost(
+            plan_stream(N_MODEL, CoarseningConfig(), block=1024),
+            n_loads=8, arith_per_elem=6.0, divergence_paths=paths,
+            divergence_uniform=uniform, bounded_trip_factor=trips)
+        base_ind = A.gather_cost(
+            plan_stream(N_MODEL, CoarseningConfig(), block=1024),
+            n_loads=8, arith_per_elem=6.0 * paths * trips,
+            hit_rate=0.854, window_elems=8192)
+        for fam in FAMS:
+            d, c = _best(fam, n_loads=8, arith_per_elem=6.0,
+                         divergence_paths=paths, divergence_uniform=uniform,
+                         bounded_trip_factor=trips)
+            us = -1.0
+            if fam != "pipe":
+                cfg = CoarseningConfig.parse(f"{fam}{d}")
+                us = wall_us(lambda *xs: ops.ew_stream(
+                    xs, cfg, ai=6, variant=variant, block=512), *inputs)
+            emit(f"fig10,direct,{variant},{fam}{d}", us, c.modeled_s * 1e6,
+                 speedup=round(base_direct.modeled_s / c.modeled_s, 2))
+            di, ci = _best(fam, n_loads=8, arith_per_elem=6.0 * paths * trips,
+                           hit_rate=0.854, window_elems=8192)
+            emit(f"fig10,indirect,{variant},{fam}{di}", -1,
+                 ci.modeled_s * 1e6,
+                 speedup=round(base_ind.modeled_s / ci.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Fig. 11 analog: arithmetic intensity {1,4,6,10} x direct/indirect,
+best coarsening/replication speedup at each AI."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+from repro.kernels import ops
+from benchmarks.common import wall_us, emit
+
+N_MODEL = 1 << 26
+N = 1 << 15
+AIS = (1, 4, 6, 10)
+DEGREES = (2, 4, 8)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    inputs = tuple(jax.random.normal(jax.random.fold_in(key, i), (N,))
+                   for i in range(8))
+    for ai in AIS:
+        base = A.stream_cost(plan_stream(N_MODEL, CoarseningConfig(),
+                                         block=1024),
+                             n_loads=8, arith_per_elem=float(ai))
+        for fam in ("con", "gap", "pipe"):
+            best = None
+            for d in DEGREES:
+                cfg = CoarseningConfig.parse(f"{fam}{d}")
+                c = A.stream_cost(plan_stream(N_MODEL, cfg, block=1024),
+                                  n_loads=8, arith_per_elem=float(ai))
+                if best is None or c.modeled_s < best[1].modeled_s:
+                    best = (d, c)
+            d, c = best
+            us = -1.0
+            if fam == "con":
+                us = wall_us(lambda *xs: ops.ew_stream(
+                    xs, CoarseningConfig.parse(f"con{d}"), ai=ai,
+                    block=512), *inputs)
+            emit(f"fig11,AI{ai},direct,{fam}{d}", us, c.modeled_s * 1e6,
+                 speedup=round(base.modeled_s / c.modeled_s, 2))
+        base_i = A.gather_cost(plan_stream(N_MODEL, CoarseningConfig(),
+                                           block=1024),
+                               n_loads=8, arith_per_elem=float(ai),
+                               hit_rate=0.854, window_elems=8192)
+        for fam in ("con", "gap", "pipe"):
+            best = None
+            for d in DEGREES:
+                cfg = CoarseningConfig.parse(f"{fam}{d}")
+                c = A.gather_cost(plan_stream(N_MODEL, cfg, block=1024),
+                                  n_loads=8, arith_per_elem=float(ai),
+                                  hit_rate=0.854, window_elems=8192)
+                if best is None or c.modeled_s < best[1].modeled_s:
+                    best = (d, c)
+            d, c = best
+            emit(f"fig11,AI{ai},indirect,{fam}{d}", -1, c.modeled_s * 1e6,
+                 speedup=round(base_i.modeled_s / c.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Fig. 12 analog: LSU-cache hit rate sweep on indirect kernels.
+
+Hit rate maps to gather-window locality (DESIGN.md §2): the VMEM-resident
+window serves `hit_rate` of accesses; misses pay per-element HBM latency.
+Rates {0,40,60,70,80,90}% as in the paper (10-30% unachievable there)."""
+from __future__ import annotations
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+from benchmarks.common import emit
+
+N_MODEL = 1 << 26
+RATES = (0.0, 0.4, 0.6, 0.7, 0.8, 0.9)
+DEGREES = (2, 4, 8)
+
+
+def main():
+    for rate in RATES:
+        kw = dict(n_loads=8, arith_per_elem=6.0, hit_rate=rate,
+                  window_elems=8192)
+        base = A.gather_cost(plan_stream(N_MODEL, CoarseningConfig(),
+                                         block=1024), **kw)
+        for fam in ("con", "gap", "pipe"):
+            best = None
+            for d in DEGREES:
+                c = A.gather_cost(
+                    plan_stream(N_MODEL, CoarseningConfig.parse(f"{fam}{d}"),
+                                block=1024), **kw)
+                if best is None or c.modeled_s < best[1].modeled_s:
+                    best = (d, c)
+            d, c = best
+            emit(f"fig12,hit{int(rate * 100)},{fam}{d}", -1,
+                 c.modeled_s * 1e6,
+                 speedup=round(base.modeled_s / c.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig. 13 analog: work-item divergence degree {0,2,4} x direct/indirect."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+from repro.kernels import ops
+from benchmarks.common import wall_us, emit
+
+N_MODEL = 1 << 26
+N = 1 << 15
+DEGREES = (2, 4, 8)
+DIV = (0, 2, 4)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    inputs = tuple(jax.random.normal(jax.random.fold_in(key, i), (N,))
+                   for i in range(8))
+    for deg in DIV:
+        paths = max(1, deg)
+        base = A.stream_cost(plan_stream(N_MODEL, CoarseningConfig(),
+                                         block=1024),
+                             n_loads=8, arith_per_elem=6.0,
+                             divergence_paths=paths)
+        for fam in ("con", "gap", "pipe"):
+            best = None
+            for d in DEGREES:
+                c = A.stream_cost(
+                    plan_stream(N_MODEL, CoarseningConfig.parse(f"{fam}{d}"),
+                                block=1024),
+                    n_loads=8, arith_per_elem=6.0, divergence_paths=paths)
+                if best is None or c.modeled_s < best[1].modeled_s:
+                    best = (d, c)
+            d, c = best
+            us = -1.0
+            if fam == "con" and deg in (0, 2, 4):
+                variant = {0: "base", 2: "div2", 4: "div4"}[deg]
+                us = wall_us(lambda *xs: ops.ew_stream(
+                    xs, CoarseningConfig.parse(f"con{d}"), ai=6,
+                    variant=variant, block=512), *inputs)
+            emit(f"fig13,div{deg},direct,{fam}{d}", us, c.modeled_s * 1e6,
+                 speedup=round(base.modeled_s / c.modeled_s, 2))
+        base_i = A.gather_cost(plan_stream(N_MODEL, CoarseningConfig(),
+                                           block=1024),
+                               n_loads=8, arith_per_elem=6.0 * paths,
+                               hit_rate=0.854, window_elems=8192)
+        for fam in ("con", "gap", "pipe"):
+            best = None
+            for d in DEGREES:
+                c = A.gather_cost(
+                    plan_stream(N_MODEL, CoarseningConfig.parse(f"{fam}{d}"),
+                                block=1024),
+                    n_loads=8, arith_per_elem=6.0 * paths,
+                    hit_rate=0.854, window_elems=8192)
+                if best is None or c.modeled_s < best[1].modeled_s:
+                    best = (d, c)
+            d, c = best
+            emit(f"fig13,div{deg},indirect,{fam}{d}", -1, c.modeled_s * 1e6,
+                 speedup=round(base_i.modeled_s / c.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

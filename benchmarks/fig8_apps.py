@@ -1,0 +1,130 @@
+"""Paper Fig. 8/9 analog: the application suite under each optimization.
+
+Apps (Rodinia/Pannotia analog, per DESIGN.md §3):
+  matmul   — dense linear algebra (LU / Gaussian / NN)
+  stencil  — structured grid (Hotspot)
+  dp_scan  — dynamic programming (Pathfinder; sequential carry == barrier)
+  gather   — graph traversal (BFS / PageRank; irregular access)
+
+For each app x {Con,Gap,Pipe,SIMD} x degree {2,4,8}: modeled v5e time (the
+speedup chart) + VMEM/DMA resource proxies (the ALUT/RAM charts).  N/A cells
+mirror the paper's empty columns (gapped on sequential kernels, SIMD on
+divergent kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+from repro.kernels import ops
+from repro.kernels import gather_stream as gs
+from benchmarks.common import wall_us, emit
+
+DEGREES = (2, 4, 8)
+N = 1 << 16          # measured size (CPU interpret); model uses 64M
+N_MODEL = 1 << 26    # paper: 64M-element arrays
+
+
+def _variants():
+    out = [("base", CoarseningConfig())]
+    for d in DEGREES:
+        out.append((f"con{d}", CoarseningConfig.parse(f"con{d}")))
+        out.append((f"gap{d}", CoarseningConfig.parse(f"gap{d}")))
+        out.append((f"pipe{d}", CoarseningConfig.parse(f"pipe{d}")))
+        out.append((f"simd{d}", CoarseningConfig.parse(f"simd{d}")))
+    # combined mechanisms (paper §IV.B: "not mutually exclusive")
+    out.append(("con4+pipe2", CoarseningConfig.parse("con4+pipe2")))
+    out.append(("con2+simd2", CoarseningConfig.parse("con2+simd2")))
+    return out
+
+
+def bench_matmul():
+    m = n = k = 512
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (m, k))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    base_cost = A.matmul_cost(2048, 2048, 2048, CoarseningConfig())
+    for name, cfg in _variants():
+        cfgm = cfg
+        try:
+            us = wall_us(lambda aa, bb: ops.matmul(
+                aa, bb, cfgm, bm=64, bn=128, bk=128), a, b)
+        except ValueError:
+            emit(f"fig8,matmul,{name}", -1, -1, status="NA")
+            continue
+        cost = A.matmul_cost(2048, 2048, 2048, cfgm)
+        emit(f"fig8,matmul,{name}", us, cost.modeled_s * 1e6,
+             speedup=round(base_cost.modeled_s / cost.modeled_s, 2),
+             vmem=cost.vmem_bytes, dmas=cost.dmas_per_step)
+
+
+def bench_stencil():
+    rows, cols = 256, 512
+    x = jax.random.normal(jax.random.PRNGKey(2), (rows, cols))
+    base = A.stream_cost(plan_stream(N_MODEL, CoarseningConfig(), block=1024),
+                         n_loads=3, arith_per_elem=9.0)
+    for name, cfg in _variants():
+        if cfg.replication > 1 or cfg.vector_width > 1:
+            plan = plan_stream(N_MODEL, cfg, block=1024)
+            cost = A.stream_cost(plan, n_loads=3, arith_per_elem=9.0)
+            emit(f"fig8,stencil,{name}", -1, cost.modeled_s * 1e6,
+                 speedup=round(base.modeled_s / cost.modeled_s, 2),
+                 vmem=cost.vmem_bytes, dmas=cost.dmas_per_step)
+            continue
+        us = wall_us(lambda xx: ops.stencil5(xx, cfg, block_rows=8), x)
+        cost = A.stream_cost(plan_stream(N_MODEL, cfg, block=1024),
+                             n_loads=3, arith_per_elem=9.0)
+        emit(f"fig8,stencil,{name}", us, cost.modeled_s * 1e6,
+             speedup=round(base.modeled_s / cost.modeled_s, 2),
+             vmem=cost.vmem_bytes, dmas=cost.dmas_per_step)
+
+
+def bench_dp_scan():
+    rows, cols = 128, 1024
+    c = jax.random.uniform(jax.random.PRNGKey(3), (rows, cols))
+    base = A.scan_cost(1_000_000, 1000 * 1024, CoarseningConfig())
+    for name, cfg in _variants():
+        cost = A.scan_cost(1_000_000, 1000 * 1024, cfg)
+        if cost is None or cfg.vector_width > 8:
+            emit(f"fig8,dp_scan,{name}", -1, -1, status="NA(gapped-carry)")
+            continue
+        us = -1.0
+        if cfg.replication == 1 and cfg.vector_width == 1:
+            us = wall_us(lambda cc: ops.dp_scan(cc, cfg), c)
+        emit(f"fig8,dp_scan,{name}", us, cost.modeled_s * 1e6,
+             speedup=round(base.modeled_s / cost.modeled_s, 2),
+             vmem=cost.vmem_bytes, dmas=cost.dmas_per_step)
+
+
+def bench_gather():
+    n, table = N, 1 << 14
+    idx = jnp.asarray(gs.make_indices(n, table, 4096, seed=1))
+    tables = tuple(jax.random.normal(jax.random.fold_in(
+        jax.random.PRNGKey(4), i), (table,)) for i in range(8))
+    kw = dict(n_loads=8, arith_per_elem=6.0, hit_rate=0.854,
+              window_elems=8192)
+    base = A.gather_cost(plan_stream(N_MODEL, CoarseningConfig(), block=1024),
+                         **kw)
+    for name, cfg in _variants():
+        plan = plan_stream(N_MODEL, cfg, block=1024)
+        cost = A.gather_cost(plan, **kw)
+        us = -1.0
+        if cfg.replication == 1 and cfg.vector_width == 1:
+            us = wall_us(lambda ii, *tt: ops.gather_stream(
+                ii, tt, cfg, block=512), idx, *tables)
+        emit(f"fig8,gather,{name}", us, cost.modeled_s * 1e6,
+             speedup=round(base.modeled_s / cost.modeled_s, 2),
+             vmem=cost.vmem_bytes, dmas=cost.dmas_per_step)
+
+
+def main():
+    bench_matmul()
+    bench_stencil()
+    bench_dp_scan()
+    bench_gather()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""§Perf hillclimb report: before/after roofline terms for the hillclimbed
+cells, combining the analytic model (per-step truth for scanned programs)
+with the dry-run artifacts (structural evidence: collective inventory,
+memory fit).
+
+    PYTHONPATH=src python -m benchmarks.perf_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.core.perfmodel import (MeshInfo, train_step_terms,
+                                  decode_step_terms)
+from repro.core.rooflines import PEAK_FLOPS_BF16, HBM_BW, LINK_BW
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+MESH = MeshInfo(dp=16, tp=16)
+
+
+def frac(t):
+    c = t.flops / PEAK_FLOPS_BF16
+    m = t.hbm_bytes / HBM_BW
+    x = t.coll_bytes / LINK_BW
+    step = max(c, m, x)
+    return c, m, x, c / step, {c: "compute", m: "memory", x: "collective"}[step]
+
+
+def art(name):
+    p = os.path.join(ART, name + ".json")
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def row(label, t, artifact=None):
+    c, m, x, f, bound = frac(t)
+    extra = ""
+    if artifact:
+        extra = (f" | HLO-static coll {artifact['collective_bytes'] / 2**30:.1f}GiB"
+                 f" ({artifact['collectives']['count']} ops),"
+                 f" temp {artifact['temp_size'] / 2**30:.1f}GiB")
+    print(f"{label:54s} compute={c:9.4f}s memory={m:9.4f}s coll={x:9.4f}s "
+          f"bound={bound:10s} roofline_frac={f:.3f}{extra}")
+    return f
+
+
+def kernel_cell():
+    """Cell 0: the paper's own microbenchmark kernel (kernel-level §Perf
+    loop): iterate block size x coarsening degree against the v5e DMA
+    pipeline model; stop when <5% on the dominant (DMA) term."""
+    from repro.core import CoarseningConfig, plan_stream
+    from repro.core import analysis as A
+
+    n = 1 << 26
+    print("== Cell 0: ew_stream microbenchmark (paper-representative) ==")
+    path = [
+        ("baseline block=1024 (4KiB DMA/operand)", "none", 1024),
+        ("con8 (one 32KiB DMA; 8x fewer descriptors)", "con8", 1024),
+        ("con8 + block=4096 (128KiB DMA)", "con8", 4096),
+        ("con8 + block=32768 (1MiB DMA)", "con8", 32768),
+        ("con8 + block=131072 (4MiB DMA; 72MiB VMEM)", "con8", 131072),
+        ("con8 + block=262144 (8MiB DMA; >VMEM if dbl-buf 9 streams)",
+         "con8", 262144),
+    ]
+    floor = n * 9 * 4 / 819e9
+    prev = None
+    for label, spec, block in path:
+        cfg = CoarseningConfig.parse(spec)
+        c = A.stream_cost(plan_stream(n, cfg, block=block), n_loads=8,
+                          arith_per_elem=6.0)
+        delta = "" if prev is None else f"  ({prev / c.modeled_s:.2f}x vs prev)"
+        fit = "" if c.vmem_bytes <= 128 * 2**20 else "  [VMEM OVER -> reject]"
+        print(f"  {label:58s} dma/step={c.dma_s_per_step * 1e6:7.2f}us "
+              f"modeled={c.modeled_s * 1e3:8.2f}ms vmem={c.vmem_bytes >> 20}MiB"
+              f"{delta}{fit}")
+        prev = c.modeled_s
+    print(f"  HBM bandwidth floor = {floor * 1e3:.2f}ms; stop at block=131072 "
+          f"(1.2x floor; the only faster candidate violates the 128MiB VMEM "
+          f"budget -> the working-set constraint binds, as in the paper's "
+          f"FPGA resource-fit rejections)\n")
+
+
+def main():
+    kernel_cell()
+    print("== Cell 1: mamba2-370m x train_4k (worst baseline fraction) ==")
+    cfg = get_config("mamba2-370m")
+    kw = dict(seq=4096, batch=256, mesh=MESH)
+    f0 = row("baseline (n_micro=4)", train_step_terms(cfg, n_micro=4, **kw),
+             art("mamba2-370m_train_4k_16x16"))
+    row("+ Megatron-SP residuals",
+        train_step_terms(cfg, n_micro=4, sp_activations=True, **kw),
+        art("mamba2-370m_train_4k_16x16_sp_activations-True"))
+    row("+ SP and n_micro=2 (memory headroom -> fewer gathers)",
+        train_step_terms(cfg, n_micro=2, sp_activations=True, **kw),
+        art("mamba2-370m_train_4k_16x16_n_micro-2_sp_activations-True"))
+    f1 = row("+ int8 EF grad compression + 64MB buckets",
+             train_step_terms(cfg, n_micro=2, sp_activations=True,
+                              grad_compression="int8",
+                              bucket_bytes=64 * 2**20, **kw))
+    print(f"   -> dominant-term improvement {f1 / f0:.2f}x on roofline frac\n")
+
+    print("== Cell 2: seamless-m4t x train_4k (most collective-bound) ==")
+    cfg = get_config("seamless-m4t-large-v2")
+    f0 = row("baseline (pre vocab-pad; HLO showed 191GiB static coll)",
+             train_step_terms(cfg, n_micro=4, **kw))
+    row("+ vocab pad-to-256 (logits shardable) + ckpt loss chunk",
+        train_step_terms(cfg, n_micro=4, **kw),
+        art("seamless-m4t-large-v2_train_4k_16x16"))
+    f1 = row("+ int8 EF + buckets",
+             train_step_terms(cfg, n_micro=4, grad_compression="int8",
+                              bucket_bytes=64 * 2**20, **kw))
+    print()
+
+    print("== Cell 3: olmoe-1b-7b x decode_32k (serving; paper-insight cell) ==")
+    cfg = get_config("olmoe-1b-7b")
+    kwd = dict(seq=32768, batch=128, mesh=MESH)
+    f0 = row("baseline (FSDP-sharded serve weights)",
+             decode_step_terms(cfg, **kwd),
+             art("olmoe-1b-7b_decode_32k_16x16"))
+    f1 = row("+ replicated serve weights (no per-step param AG)",
+             decode_step_terms(cfg, replicate_serve_weights=True, **kwd),
+             art("olmoe-1b-7b_decode_32k_16x16_replicate_serve_weights-True"))
+    print(f"   -> roofline frac {f0:.4f} -> {f1:.4f}\n")
+
+    print("== Cell 4: yi-34b x train_4k (largest model; bucket coarsening) ==")
+    cfg = get_config("yi-34b")
+    f0 = row("baseline n_micro=16 (fit-constrained)",
+             train_step_terms(cfg, n_micro=16, **kw),
+             art("yi-34b_train_4k_16x16"))
+    row("n_micro=8 (pre-M6 did not fit; post-M6 21.1GiB still over)",
+        train_step_terms(cfg, n_micro=8, **kw),
+        art("yi-34b_train_4k_16x16_n_micro-8"))
+    row("n_micro=8 + SP residuals (6.1GiB -> fits)",
+        train_step_terms(cfg, n_micro=8, sp_activations=True, **kw),
+        art("yi-34b_train_4k_16x16_n_micro-8_sp_activations-True"))
+    f1 = row("n_micro=2 + SP (12.1GiB -> fits; 8x fewer param gathers)",
+             train_step_terms(cfg, n_micro=2, sp_activations=True, **kw),
+             art("yi-34b_train_4k_16x16_n_micro-2_sp_activations-True"))
+    f2 = row("n_micro=2 + SP + int8 EF + 64MB buckets",
+             train_step_terms(cfg, n_micro=2, sp_activations=True,
+                              grad_compression="int8",
+                              bucket_bytes=64 * 2**20, **kw))
+    print(f"   -> roofline frac {f0:.3f} -> {f1:.3f} -> {f2:.3f}")
+
+
+if __name__ == "__main__":
+    main()

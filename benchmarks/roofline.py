@@ -1,0 +1,91 @@
+"""§Roofline table: per (arch x shape x mesh) three-term roofline.
+
+Terms come from core/perfmodel.py closed forms (exact for the loops we emit;
+see tests/test_rooflines.py for the while-loop undercount proof + validation)
+and are cross-referenced with the dry-run artifacts in experiments/dryrun/
+(memory fit + collective inventory) when present.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, TRAIN_N_MICRO, get_config
+from repro.core.perfmodel import (MeshInfo, train_step_terms,
+                                  decode_step_terms, prefill_step_terms)
+from repro.core.rooflines import PEAK_FLOPS_BF16, HBM_BW, LINK_BW
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def cell_terms(arch: str, shape: str, mesh: MeshInfo, **kw):
+    cfg = get_config(arch)
+    if kw.pop("moe_combine_bf16", False) and cfg.n_experts:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe_combine_dtype="bfloat16")
+    sh = SHAPES[shape]
+    if sh["kind"] == "train":
+        kw.setdefault("n_micro", TRAIN_N_MICRO.get(arch, 4))
+        return train_step_terms(cfg, seq=sh["seq"], batch=sh["batch"],
+                                mesh=mesh, **kw)
+    if sh["kind"] == "prefill":
+        return prefill_step_terms(
+            cfg, seq=sh["seq"], batch=sh["batch"], mesh=mesh,
+            sp_activations=kw.get("sp_activations", False))
+    return decode_step_terms(cfg, seq=sh["seq"], batch=sh["batch"], mesh=mesh,
+                             **kw)
+
+
+def roofline_row(arch: str, shape: str, mesh: MeshInfo, **kw):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return None
+    t = cell_terms(arch, shape, mesh, **kw)
+    compute_s = t.flops / PEAK_FLOPS_BF16
+    memory_s = t.hbm_bytes / HBM_BW
+    coll_s = t.coll_bytes / LINK_BW
+    step = max(compute_s, memory_s, coll_s)
+    bound = {compute_s: "compute", memory_s: "memory",
+             coll_s: "collective"}[step]
+    tokens = sh["batch"] * (sh["seq"] if sh["kind"] in ("train", "prefill")
+                            else 1)
+    mult = 6 if sh["kind"] == "train" else 2
+    model_flops = mult * cfg.active_param_count() * tokens / mesh.chips
+    return {
+        "arch": arch, "shape": shape, "mesh": f"{mesh.dp}x{mesh.tp}",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "bound": bound,
+        "roofline_frac": compute_s / step if step else 0.0,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / t.flops if t.flops else 0.0,
+        "notes": t.notes,
+    }
+
+
+def main():
+    mesh = MeshInfo(dp=16, tp=16)
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = roofline_row(arch, shape, mesh)
+            if r is None:
+                emit(f"roofline,{arch},{shape}", -1, -1, status="SKIP")
+                continue
+            rows.append(r)
+            emit(f"roofline,{arch},{shape}", -1,
+                 max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                 bound=r["bound"], frac=round(r["roofline_frac"], 3),
+                 compute_us=round(r["compute_s"] * 1e6, 1),
+                 memory_us=round(r["memory_s"] * 1e6, 1),
+                 coll_us=round(r["collective_s"] * 1e6, 1))
+    # correlate with dry-run artifacts when available
+    arts = glob.glob(os.path.join(ART, "*.json"))
+    emit("roofline,artifacts", -1, float(len(arts)), found=len(arts))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig11,fig12]
+
+Tables (one per paper figure):
+  fig8   — application suite x {Con,Gap,Pipe,SIMD} x degree (Fig. 8/9)
+  fig10  — memory-access type x control-flow divergence (Fig. 10)
+  fig11  — arithmetic-intensity sweep (Fig. 11)
+  fig12  — LSU-cache hit-rate sweep (Fig. 12)
+  fig13  — divergence-degree sweep (Fig. 13)
+  coll   — beyond-paper: collective bucket-coarsening
+  roofline — §Roofline per (arch x shape), analytic terms
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
+                        fig12_cache, fig13_divdeg, collectives_coarsening,
+                        roofline)
+from benchmarks.common import ROWS
+
+TABLES = {
+    "fig8": fig8_apps.main,
+    "fig10": fig10_mem_divergence.main,
+    "fig11": fig11_ai.main,
+    "fig12": fig12_cache.main,
+    "fig13": fig13_divdeg.main,
+    "coll": collectives_coarsening.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table subset")
+    args, _ = ap.parse_known_args()
+    names = args.only.split(",") if args.only else list(TABLES)
+    print("name,us_per_call,derived")
+    for name in names:
+        print(f"# --- {name} ---")
+        TABLES[name]()
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_rows.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(ROWS, f, indent=1)
+    print(f"# wrote {len(ROWS)} rows")
+
+
+if __name__ == '__main__':
+    main()

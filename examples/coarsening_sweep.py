@@ -1,0 +1,118 @@
+"""Reproduce the paper's full microbenchmark study (Figs. 10-13 analogs)
+and print the finding-by-finding comparison with the paper.
+
+    PYTHONPATH=src python examples/coarsening_sweep.py
+"""
+import sys
+
+from repro.core import CoarseningConfig, plan_stream
+from repro.core import analysis as A
+
+N = 1 << 26
+
+
+def best(fam, make_cost):
+    out = None
+    for d in (2, 4, 8):
+        c = make_cost(CoarseningConfig.parse(f"{fam}{d}"))
+        if c is not None and (out is None or c.modeled_s < out[1].modeled_s):
+            out = (d, c)
+    return out
+
+
+def regular(cfg, ai=6.0, **kw):
+    return A.stream_cost(plan_stream(N, cfg, block=1024), n_loads=8,
+                         arith_per_elem=ai, **kw)
+
+
+def irregular(cfg, ai=6.0, hit=0.854):
+    return A.gather_cost(plan_stream(N, cfg, block=1024), n_loads=8,
+                         arith_per_elem=ai, hit_rate=hit, window_elems=8192)
+
+
+checks = []
+
+# F1: regular access -> consecutive wins big, beats gapped
+b = regular(CoarseningConfig()).modeled_s
+dc, cc = best("con", regular)
+dg, cg = best("gap", regular)
+s_con, s_gap = b / cc.modeled_s, b / cg.modeled_s
+checks.append(("F1 consecutive>=gapped on regular (paper: 5.8x vs less)",
+               s_con >= s_gap and s_con > 2.0,
+               f"con{dc}={s_con:.2f}x gap{dg}={s_gap:.2f}x"))
+
+# F2: irregular access -> wins collapse, gapped >= consecutive.
+# TPU divergence (DESIGN.md §2): the FPGA's per-LSU miss caches give gapped
+# its edge; TPU DMA engines already overlap misses for every variant, so
+# both kinds' wins collapse and gapped keeps only a small queue-depth edge.
+bi = irregular(CoarseningConfig()).modeled_s
+dci, cci = best("con", irregular)
+dgi, cgi = best("gap", irregular)
+si_con, si_gap = bi / cci.modeled_s, bi / cgi.modeled_s
+checks.append(("F2 irregular: wins collapse; gapped >= consecutive "
+               "(paper: 1.34x gap)",
+               si_gap >= si_con and si_gap < 2.0,
+               f"con{dci}={si_con:.2f}x gap{dgi}={si_gap:.2f}x"))
+
+# F3: lower AI -> bigger coarsening win.  TPU divergence: the VPU is so fast
+# relative to HBM that AI 1-10 never flips the bound — the trend is
+# non-increasing but nearly flat (on the Arria 10 arithmetic consumed
+# fabric, so the paper saw a real slope).
+wins = []
+for ai in (1.0, 4.0, 6.0, 10.0):
+    bb = regular(CoarseningConfig(), ai=ai).modeled_s
+    _, c = best("con", lambda cfg: regular(cfg, ai=ai))
+    wins.append(bb / c.modeled_s)
+checks.append(("F3 speedup non-increasing with AI (paper Fig. 11; "
+               "flat on TPU — memory-bound at every tested AI)",
+               all(wins[i] >= wins[i + 1] - 1e-9 for i in range(3)),
+               " ".join(f"AI{a}={w:.2f}x" for a, w in
+                        zip((1, 4, 6, 10), wins))))
+
+# F4: divergence hurts; id-divergence partially recoverable.  TPU
+# divergence: predication is a COMPUTE-side penalty, and the whole
+# microbenchmark family is DMA-bound on v5e at the paper's AI range — so we
+# assert the ordering on the compute term (where it provably holds) and
+# record that the end-to-end time hides it (a genuine architectural
+# difference vs. the Arria 10, where the divergent datapath consumed
+# fabric and clock).
+clean = regular(CoarseningConfig.parse("con8"))
+div_in = regular(CoarseningConfig.parse("con8"), divergence_paths=4)
+div_id = regular(CoarseningConfig.parse("con8"), divergence_paths=4,
+                 divergence_uniform=True)
+checks.append(("F4 if-in > if-id > none on the compute term "
+               "(paper Fig. 10); total hidden under DMA on TPU",
+               div_in.compute_s_per_step > div_id.compute_s_per_step
+               > clean.compute_s_per_step
+               and div_in.modeled_s <= clean.modeled_s * 1.01,
+               f"compute/step: clean={clean.compute_s_per_step * 1e6:.3f}us "
+               f"id={div_id.compute_s_per_step * 1e6:.3f}us "
+               f"in={div_in.compute_s_per_step * 1e6:.3f}us; "
+               f"total {div_in.modeled_s * 1e3:.1f}ms == DMA-bound"))
+
+# F5: coarsening cheaper than replication at similar speedup.  TPU analog of
+# the ALUT saving: R x fewer DMA queues/semaphores; the RAM-block saving
+# does NOT transfer (resident VMEM totals are equal) — documented.
+cost_con = regular(CoarseningConfig.parse("con4"))
+cost_pipe = regular(CoarseningConfig.parse("pipe4"))
+checks.append(("F5 coarsening control resources < replication "
+               "(paper Fig. 9; TPU: queue count, VMEM parity)",
+               cost_con.dma_sems < cost_pipe.dma_sems
+               and cost_con.vmem_bytes == cost_pipe.vmem_bytes
+               and cost_con.modeled_s <= cost_pipe.modeled_s * 1.2,
+               f"sems con4={cost_con.dma_sems} pipe4={cost_pipe.dma_sems}; "
+               f"vmem equal={cost_con.vmem_bytes == cost_pipe.vmem_bytes}"))
+
+# F6: mechanisms compose
+combo = regular(CoarseningConfig.parse("con4+pipe2"))
+alone = min(regular(CoarseningConfig.parse("con4")).modeled_s,
+            regular(CoarseningConfig.parse("pipe2")).modeled_s)
+checks.append(("F6 con4+pipe2 <= best alone (paper: Backprop 3.2x)",
+               combo.modeled_s <= alone * 1.05,
+               f"combo={combo.modeled_s * 1e3:.1f}ms alone={alone * 1e3:.1f}ms"))
+
+fails = 0
+for name, ok, detail in checks:
+    print(f"[{'PASS' if ok else 'FAIL'}] {name}\n       {detail}")
+    fails += 0 if ok else 1
+sys.exit(1 if fails else 0)

@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests (continuous batching).
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 8 --slots 4
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

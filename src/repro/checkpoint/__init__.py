@@ -1,0 +1,2 @@
+"""Checkpoint substrate: atomic, async, elastic-restorable checkpoints."""
+from .manager import CheckpointManager, save_checkpoint, load_checkpoint

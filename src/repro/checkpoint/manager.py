@@ -1,0 +1,184 @@
+"""Atomic manifest-based checkpoints with async save, retention, integrity
+hashes and elastic (mesh-shape-agnostic) restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json     — leaf paths, shapes, dtypes, sha256, user state
+            arrays.npz        — all leaves, saved from host memory
+         <dir>/step_<N>.tmp/  — staging; renamed atomically on completion
+         <dir>/LATEST         — text file with the newest complete step
+
+Elasticity: leaves are stored as *logical* (unsharded) arrays keyed by path,
+so a restart may use any mesh — `jax.device_put(leaf, new_sharding)` reshards
+on load.  On multi-host deployments the same manifest format is written per
+process with disjoint shard slices (documented in DESIGN.md); this repo's
+single-process runtime gathers to host 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(skeleton, flat, prefix=""):
+    if isinstance(skeleton, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}{_SEP}")
+                for k, v in skeleton.items()}
+    if isinstance(skeleton, list):
+        return [_unflatten_into(v, flat, f"{prefix}{i}{_SEP}")
+                for i, v in enumerate(skeleton)]
+    if isinstance(skeleton, tuple):
+        return tuple(_unflatten_into(v, flat, f"{prefix}{i}{_SEP}")
+                     for i, v in enumerate(skeleton))
+    return flat[prefix[:-1]]
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Atomic synchronous save; returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **{k.replace(_SEP, "|"): v for k, v in arrays.items()})
+    digest = hashlib.sha256(open(npz_path, "rb").read()).hexdigest()
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "sha256": digest,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(f"step_{step:08d}")
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    return final
+
+
+def load_checkpoint(directory: str, skeleton: Any, step: Optional[int] = None,
+                    shardings: Any = None, verify: bool = True):
+    """Restore into `skeleton` structure; optionally reshard (elastic)."""
+    if step is None:
+        with open(os.path.join(directory, "LATEST")) as f:
+            name = f.read().strip()
+    else:
+        name = f"step_{step:08d}"
+    path = os.path.join(directory, name)
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    npz_path = os.path.join(path, "arrays.npz")
+    if verify:
+        digest = hashlib.sha256(open(npz_path, "rb").read()).hexdigest()
+        if digest != manifest["sha256"]:
+            raise IOError(f"checkpoint {path} integrity check failed")
+    data = np.load(npz_path)
+    flat = {k.replace("|", _SEP): data[k] for k in data.files}
+    tree = _unflatten_into(skeleton, flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(jnp.asarray(a), s),
+                            tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Async save + retention + auto-resume."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 save_interval_steps: int = 100):
+        self.directory = directory
+        self.keep = keep
+        self.save_interval_steps = save_interval_steps
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save ----------------------------------------------------------
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_interval_steps == 0
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self.check()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.check()
+
+    def check(self) -> None:
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # ---- restore ---------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        return int(open(latest).read().strip().split("_")[1])
+
+    def restore(self, skeleton: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        return load_checkpoint(self.directory, skeleton, step, shardings)
+
+    # ---- retention -------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,11 @@
+"""gemma3-1b [dense] — 5:1 local:global attention, 128k ctx.
+[hf:google/gemma-3-1b-pt]"""
+from repro.models.config import ModelConfig, ATTN_LOCAL, ATTN_GLOBAL
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1, d_ff=6912,
+    vocab=262144, head_dim=256,
+    pattern_period=(ATTN_LOCAL,) * 5 + (ATTN_GLOBAL,), window=512,
+    rope_theta=1e6, tie_embeddings=True,
+)

@@ -1,0 +1,11 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, pattern (R,R,L).
+[arXiv:2402.19427]"""
+from repro.models.config import ModelConfig, RECURRENT, ATTN_LOCAL
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, d_ff=7680,
+    vocab=256000, head_dim=256,
+    pattern_period=(RECURRENT, RECURRENT, ATTN_LOCAL), window=2048,
+    lru_width=2560, tie_embeddings=True,
+)

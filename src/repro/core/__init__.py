@@ -1,0 +1,22 @@
+"""Core: thread-coarsening transforms + cost/roofline analysis.
+
+The paper's primary contribution (thread coarsening as a compiler transform,
+compared against pipeline replication and SIMD vectorization) lives here as a
+composable configuration applied to Pallas kernels across the framework.
+"""
+from .coarsening import (
+    CoarseningConfig,
+    StreamPlan,
+    RowPlan,
+    plan_stream,
+    plan_rows,
+    pallas_stream_call,
+    stream_view,
+    unstream_view,
+    tile,
+    untile,
+    KIND_NONE,
+    KIND_CONSECUTIVE,
+    KIND_GAPPED,
+)
+from . import analysis, rooflines

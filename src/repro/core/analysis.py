@@ -1,0 +1,281 @@
+"""Analytic TPU-v5e pipeline model — the paper's LSU/resource analysis, ported.
+
+The paper evaluates coarsening variants by (a) wall time on the Arria 10 and
+(b) the Intel offline compiler's report: LSU count/width/type, ALUTs, RAM
+blocks.  This container has no TPU, so the equivalent artifacts here are:
+
+  wall time        -> modeled steady-state pipeline time on TPU v5e
+                      (double-buffered Pallas pipeline: per-step cost =
+                      max(DMA-in, compute, DMA-out); plus per-DMA issue
+                      overhead that penalises many-narrow-descriptors —
+                      the burst-coalescing effect)
+  LSU count/width  -> DMA descriptors per operand per grid step / bytes each
+  ALUTs/RAM blocks -> VMEM working set (double-buffered) + DMA semaphores
+
+The model is deliberately simple and *directional*: it exists to rank
+coarsening variants the way the FPGA compiler report ranks LSU configurations,
+and its rankings are what EXPERIMENTS.md validates against the paper's
+findings F1-F5.  Constants match the roofline constants used in §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .coarsening import CoarseningConfig, StreamPlan, KIND_GAPPED
+
+# --- TPU v5e constants (per chip) ------------------------------------------
+HBM_BW = 819e9              # B/s
+MXU_FLOPS_BF16 = 197e12     # FLOP/s
+MXU_FLOPS_F32 = 49e12       # FLOP/s (f32 through MXU ~ 1/4 rate)
+VPU_FLOPS_F32 = 4e12        # FLOP/s elementwise (8x128 lanes x ~4 ALUs x 940MHz)
+DMA_ISSUE_S = 1.0e-6        # fixed per-descriptor issue latency (s)
+DMA_MIN_EFF_BYTES = 512.0   # transfers below this see proportionally lower bw
+VMEM_BYTES = 128 * 2 ** 20  # 128 MiB VMEM on v5e
+HBM_LATENCY_S = 0.7e-6      # single random-access latency (gather miss cost)
+NUM_CORES = 1               # v5e has one TensorCore per chip
+DMA_MLP = 16                # outstanding random accesses the DMA engines
+                            # keep in flight (memory-level parallelism)
+
+
+@dataclasses.dataclass
+class KernelCost:
+    """Per-variant report — the analog of the Intel compiler report table."""
+
+    label: str
+    grid: int
+    # LSU analog
+    dmas_per_step: int          # total DMA descriptors per grid step
+    dma_bytes: float            # bytes of the *typical* descriptor (LSU width)
+    # resource analog
+    vmem_bytes: int             # double-buffered VMEM working set ("RAM blocks")
+    dma_sems: int               # in-flight semaphores ("ALUT/control" analog)
+    # time model
+    dma_s_per_step: float
+    compute_s_per_step: float
+    modeled_s: float            # total modeled kernel time (steady state)
+    bound: str                  # 'memory' | 'compute'
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _dma_time(bytes_per_desc: float, n_desc: int, bw: float = HBM_BW) -> float:
+    """Time to move n_desc descriptors of bytes_per_desc each.
+
+    Narrow descriptors pay (a) a fixed issue cost each and (b) reduced
+    effective bandwidth when under DMA_MIN_EFF_BYTES — this is the
+    burst-coalescing term that makes one 512-bit LSU beat eight 32-bit ones
+    in the paper.
+    """
+    if n_desc == 0 or bytes_per_desc == 0:
+        return 0.0
+    eff = min(1.0, bytes_per_desc / DMA_MIN_EFF_BYTES)
+    return n_desc * (DMA_ISSUE_S + bytes_per_desc / (bw * eff))
+
+
+def stream_cost(plan: StreamPlan, *, n_loads: int, n_stores: int = 1,
+                arith_per_elem: float, dtype_bytes: int = 4,
+                divergence_paths: int = 1,
+                divergence_uniform: bool = False,
+                bounded_trip_factor: float = 1.0,
+                flops_rate: float = VPU_FLOPS_F32,
+                replication: int | None = None) -> KernelCost:
+    """Model a coarsened streaming kernel (the paper's Fig. 6 template).
+
+    divergence_paths:   number of control-flow paths (paper's divergence degree;
+                        1 = no divergence).  Data-dependent divergence on TPU is
+                        predicated: *all* paths execute -> compute multiplies.
+    divergence_uniform: id-based (direct) divergence whose predicate is uniform
+                        within a block -> specializable, only the taken path's
+                        cost is paid on average (x (paths+1)/(2*paths) fudge for
+                        the residual select).
+    bounded_trip_factor: for-in analog: data-dependent trip counts run to the
+                        worst-case bound (>=1).
+    """
+    cfg = plan.cfg
+    repl = replication if replication is not None else cfg.replication
+    elems_per_step = cfg.degree * plan.block
+    bytes_per_dma = plan.dma_elems * dtype_bytes
+
+    dmas_in = plan.dmas_per_operand * n_loads
+    dmas_out = plan.dmas_per_operand * n_stores
+    dma_in_s = _dma_time(bytes_per_dma, dmas_in)
+    dma_out_s = _dma_time(bytes_per_dma, dmas_out)
+
+    # compute: predication multiplies work for data-dependent divergence
+    paths = max(1, divergence_paths)
+    if paths > 1 and divergence_uniform:
+        div_factor = (paths + 1) / (2 * paths) + 0.5  # specialized: ~avg path
+    elif paths > 1:
+        div_factor = float(paths)                     # predicated: all paths
+    else:
+        div_factor = 1.0
+    flops_per_step = elems_per_step * arith_per_elem * div_factor * bounded_trip_factor
+    compute_s = flops_per_step / flops_rate
+
+    # replication splits the grid across R pipelines sharing HBM bandwidth.
+    grid = max(1, plan.grid // repl)
+    dma_shared_in = dma_in_s * repl / repl  # per-step issue unchanged ...
+    # ... but the *bandwidth* portion contends: model by scaling bandwidth.
+    if repl > 1:
+        dma_in_s = _dma_time(bytes_per_dma, dmas_in, bw=HBM_BW / repl)
+        dma_out_s = _dma_time(bytes_per_dma, dmas_out, bw=HBM_BW / repl)
+
+    step = max(dma_in_s + dma_out_s, compute_s)
+    warmup = dma_in_s + compute_s + dma_out_s
+    total = warmup + step * max(0, grid - 1)
+
+    # chip-total resources: replication multiplies the resident working sets
+    # AND the in-flight queues/semaphores (each replica owns a pipeline);
+    # coarsening widens one pipeline's buffers but keeps ONE queue set —
+    # the TPU analog of the paper's ALUT/control saving (Fig. 9 middle).
+    vmem = 2 * (n_loads + n_stores) * elems_per_step * dtype_bytes * repl
+    sems = (dmas_in + dmas_out) * repl
+    return KernelCost(
+        label=cfg.label, grid=grid,
+        dmas_per_step=dmas_in + dmas_out, dma_bytes=bytes_per_dma,
+        vmem_bytes=vmem, dma_sems=sems,
+        dma_s_per_step=dma_in_s + dma_out_s, compute_s_per_step=compute_s,
+        modeled_s=total,
+        bound="memory" if dma_in_s + dma_out_s >= compute_s else "compute",
+    )
+
+
+def gather_cost(plan: StreamPlan, *, n_loads: int, arith_per_elem: float,
+                hit_rate: float, window_elems: int, dtype_bytes: int = 4,
+                flops_rate: float = VPU_FLOPS_F32,
+                replication: int | None = None) -> KernelCost:
+    """Model the indirect-indexed kernel (paper Fig. 5b / cache-hit study).
+
+    The LSU cache analog is a VMEM-resident window of ``window_elems`` fetched
+    once per grid step per operand; indices hitting the window cost an in-VMEM
+    gather, misses cost one random HBM access each (descriptor latency-bound).
+    Coarsening widens the *index* stream exactly like the regular kernel, but
+    the data fetches themselves cannot be coalesced — reproducing the paper's
+    F2 (coarsening wins collapse under irregular access).
+    """
+    cfg = plan.cfg
+    repl = replication if replication is not None else cfg.replication
+    elems_per_step = cfg.degree * plan.block
+
+    # index stream DMA (regular, coarsenable)
+    idx_bytes = plan.dma_elems * 4
+    dma_idx_s = _dma_time(idx_bytes, plan.dmas_per_operand)
+    # window fetch per operand (one wide DMA; not affected by coarsening kind)
+    dma_win_s = _dma_time(window_elems * dtype_bytes, n_loads)
+    # misses: per-element random access, latency bound.  TPU divergence from
+    # the paper (DESIGN.md §2): the FPGA's per-LSU caches give gapped
+    # coarsening extra miss concurrency, but TPU DMA engines already sustain
+    # DMA_MLP outstanding accesses for EVERY variant — so the miss term is
+    # kind-independent here, and "coarsening wins collapse under irregular
+    # access" (paper F2) holds for both kinds.  Gapped keeps a small edge
+    # (degree extra queue slots), bounded by the engine limit.
+    misses = elems_per_step * n_loads * (1.0 - hit_rate)
+    overlap = min(2 * DMA_MLP,
+                  DMA_MLP + (cfg.degree if cfg.kind == KIND_GAPPED else 0))
+    miss_s = misses * HBM_LATENCY_S / overlap
+    # in-VMEM gather for hits: ~1 elem / lane-cycle -> price as extra arith
+    gather_ops = elems_per_step * n_loads * hit_rate
+    store_s = _dma_time(plan.dma_elems * dtype_bytes, plan.dmas_per_operand)
+
+    bw = HBM_BW / repl if repl > 1 else HBM_BW
+    dma_s = (dma_idx_s + dma_win_s) * (HBM_BW / bw) + miss_s + store_s
+    compute_s = (elems_per_step * arith_per_elem + gather_ops) / flops_rate
+
+    grid = max(1, plan.grid // repl)
+    step = max(dma_s, compute_s)
+    total = dma_s + compute_s + step * max(0, grid - 1)
+    vmem = 2 * (n_loads * window_elems + 2 * elems_per_step) * dtype_bytes
+    return KernelCost(
+        label=cfg.label, grid=grid,
+        dmas_per_step=plan.dmas_per_operand * (n_loads + 2) + int(misses),
+        dma_bytes=window_elems * dtype_bytes,
+        vmem_bytes=vmem, dma_sems=plan.dmas_per_operand * (n_loads + 2),
+        dma_s_per_step=dma_s, compute_s_per_step=compute_s, modeled_s=total,
+        bound="memory" if dma_s >= compute_s else "compute",
+    )
+
+
+def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
+                bm: int = 128, bn: int = 128, bk: int = 512,
+                dtype_bytes: int = 2,
+                flops_rate: float = MXU_FLOPS_BF16) -> KernelCost:
+    """Blocked matmul with row-block coarsening (dense linear algebra apps)."""
+    c = cfg.degree
+    bn = bn * cfg.vector_width          # SIMD analog: wider lane tiles
+    fused_m = bm * c
+    grid = (m // fused_m) * (n // bn) * (k // bk)
+    # A tile: fused_m x bk ; consecutive = 1 DMA, gapped = C strided DMAs
+    a_dmas = 1 if cfg.kind != KIND_GAPPED else c
+    a_bytes = fused_m * bk * dtype_bytes / a_dmas
+    b_bytes = bk * bn * dtype_bytes
+    dma_s = _dma_time(a_bytes, a_dmas) + _dma_time(b_bytes, 1)
+    out_bytes = fused_m * bn * 4
+    store_s = _dma_time(out_bytes / a_dmas, a_dmas) * (bk / k)  # amortised over k
+    flops = 2.0 * fused_m * bn * bk
+    # MXU efficiency: matmul M-dim under 128 wastes systolic rows
+    eff = min(1.0, fused_m / 128) * min(1.0, bn / 128)
+    compute_s = flops / (flops_rate * eff)
+    repl = cfg.replication
+    if repl > 1:
+        dma_s = dma_s * repl  # shared HBM
+        grid = max(1, grid // repl)
+    step = max(dma_s + store_s, compute_s)
+    total = (dma_s + compute_s + store_s) + step * max(0, grid - 1)
+    vmem = 2 * int(fused_m * bk + bk * bn) * dtype_bytes + 2 * int(fused_m * bn) * 4
+    return KernelCost(
+        label=cfg.label, grid=grid, dmas_per_step=a_dmas + 1,
+        dma_bytes=a_bytes, vmem_bytes=vmem, dma_sems=a_dmas + 2,
+        dma_s_per_step=dma_s + store_s, compute_s_per_step=compute_s,
+        modeled_s=total, bound="memory" if dma_s + store_s >= compute_s else "compute",
+    )
+
+
+def scan_cost(rows: int, cols: int, cfg: CoarseningConfig, *,
+              arith_per_elem: float = 4.0, dtype_bytes: int = 4,
+              block_cols: int = 1024,
+              flops_rate: float = VPU_FLOPS_F32) -> KernelCost | None:
+    """Sequential-carry kernel (Pathfinder/DP, SSD inter-chunk state).
+
+    The time dimension carries a dependence -> the grid over rows is
+    *sequential*.  Gapped coarsening would interleave non-adjacent rows and
+    break the carry: inapplicable (returns None), mirroring the paper's
+    finding that kernels with barriers prefer replication (§IV.B.1).
+    Consecutive coarsening fuses C successive rows into one program: fewer,
+    wider DMAs but a C x longer serial chain per step.
+    """
+    if cfg.kind == KIND_GAPPED:
+        return None
+    c = cfg.degree
+    grid_cols = cols // (block_cols * cfg.vector_width)
+    grid = (rows // c) * grid_cols
+    bytes_per_dma = c * block_cols * cfg.vector_width * dtype_bytes
+    dma_s = _dma_time(bytes_per_dma, 1) * 2  # in + out
+    # serial chain: C rows must execute in order inside the program
+    compute_s = c * block_cols * cfg.vector_width * arith_per_elem / flops_rate
+    repl = cfg.replication
+    if repl > 1:
+        # replication splits the *columns* (independent), not the carry
+        grid = max(1, grid // repl)
+        dma_s = _dma_time(bytes_per_dma, 1, bw=HBM_BW / repl) * 2
+    step = max(dma_s, compute_s)
+    total = dma_s + compute_s + step * max(0, grid - 1)
+    vmem = 4 * c * block_cols * cfg.vector_width * dtype_bytes
+    return KernelCost(
+        label=cfg.label, grid=grid, dmas_per_step=2, dma_bytes=bytes_per_dma,
+        vmem_bytes=vmem, dma_sems=2, dma_s_per_step=dma_s,
+        compute_s_per_step=compute_s, modeled_s=total,
+        bound="memory" if dma_s >= compute_s else "compute",
+    )
+
+
+def speedup_table(costs: Sequence[KernelCost], baseline: KernelCost) -> list[dict]:
+    rows = []
+    for c in costs:
+        r = c.as_row()
+        r["speedup"] = baseline.modeled_s / c.modeled_s
+        r["vmem_ratio"] = c.vmem_bytes / max(1, baseline.vmem_bytes)
+        rows.append(r)
+    return rows

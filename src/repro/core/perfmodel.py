@@ -1,0 +1,307 @@
+"""Closed-form per-step FLOPs / HBM bytes / collective bytes per device.
+
+Why analytic: XLA's ``cost_analysis()`` counts while-loop bodies ONCE
+(verified in tests/test_rooflines.py), and the model stack deliberately scans
+over layer periods and attention chunks, so raw HLO numbers undercount by the
+trip counts.  We wrote every loop, so every trip count is known — the terms
+below are exact closed forms for the structures we emit, validated against
+``cost_analysis`` on a fully-unrolled reduced config (same test).
+
+All quantities are PER DEVICE per step.  Conventions:
+  * matmul flops = 2*m*n*k ; backward = 2x forward ; remat 'full' adds +1
+    forward recompute (factor 4/3 on fwd+bwd total).
+  * HBM bytes: every tensor XLA materialises is written once + read once at
+    its consumers; we count the dominant streams (weights, activations saved
+    across the scan, optimizer state, caches).
+  * collective bytes follow the standard decompositions: all-gather moves
+    (n-1)/n of the gathered size per device; reduce-scatter likewise;
+    all-reduce = RS + AG = 2x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import (
+    ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, SSM)
+
+
+@dataclasses.dataclass
+class Terms:
+    flops: float = 0.0            # per device
+    hbm_bytes: float = 0.0        # per device
+    coll_bytes: float = 0.0       # per device wire bytes (ICI)
+    notes: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o):
+        n = dict(self.notes)
+        n.update(o.notes)
+        return Terms(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes,
+                     self.coll_bytes + o.coll_bytes, n)
+
+    def scale(self, k: float) -> "Terms":
+        return Terms(self.flops * k, self.hbm_bytes * k, self.coll_bytes * k,
+                     dict(self.notes))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    dp: int                      # data axis size (x pod for multi-pod)
+    tp: int
+    pods: int = 1
+
+    @property
+    def chips(self) -> int:
+        return self.dp * self.tp
+
+
+def _layer_param_counts(cfg: ModelConfig):
+    """(matmul params per layer kind, dict) — embedding excluded."""
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    attn = d * nq * hd * 2 + d * nkv * hd * 2
+    ffn = 3 * d * cfg.d_ff
+    moe_active = cfg.top_k * 3 * d * cfg.moe_d_ff + d * cfg.n_experts \
+        + cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+    moe_total = (cfg.n_experts + cfg.n_shared_experts) * 3 * d * cfg.moe_d_ff \
+        + d * cfg.n_experts
+    dr = cfg.d_rnn
+    rnn = 2 * d * dr + 2 * dr * dr + dr * d
+    din = cfg.d_inner
+    ssm = d * (2 * din + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads) \
+        + din * d
+    return dict(attn=attn, ffn=ffn, moe_active=moe_active,
+                moe_total=moe_total, rnn=rnn, ssm=ssm)
+
+
+COLL_LATENCY_S = 1e-6     # per-collective launch latency on ICI
+
+
+def train_step_terms(cfg: ModelConfig, *, seq: int, batch: int,
+                     mesh: MeshInfo, remat: str = "full",
+                     n_micro: int = 1, moe_capacity_factor: float = 1.5,
+                     sp_activations: bool = False,
+                     grad_compression: str = "none",
+                     bucket_bytes: int = 0) -> Terms:
+    """Per-device terms for one optimizer step (all microbatches).
+
+    Optimization flags (§Perf hillclimb levers):
+      sp_activations   — Megatron-SP: residuals sequence-sharded on the TP
+                         axis; each block boundary costs one RS+AG instead of
+                         two ARs -> TP wire bytes x0.5
+      grad_compression — 'int8': error-feedback int8 on the DP grad
+                         reduce-scatter -> RS bytes x0.25
+      bucket_bytes     — >0: grads bucketed into this size before the DP
+                         collectives -> op count = n_buckets (latency term)
+    """
+    dp, tp = mesh.dp, mesh.tp
+    b_local = batch / dp                      # rows per dp shard
+    toks = b_local * seq                      # tokens per device per step
+    pc = _layer_param_counts(cfg)
+    kinds = cfg.layer_kinds()
+
+    # ---- matmul flops (per token: 2 * params_active; bwd 2x; remat +fwd)
+    bwd_mult = 3.0
+    if remat == "full":
+        bwd_mult = 4.0
+    elif remat == "dots":
+        bwd_mult = 3.4
+    mm_params = 0.0
+    moe_overcompute = 0.0
+    for k in kinds:
+        if k in (ATTN_GLOBAL, ATTN_LOCAL):
+            mm_params += pc["attn"]
+            if cfg.n_experts:
+                mm_params += pc["moe_active"]
+                moe_overcompute += pc["moe_active"] * (moe_capacity_factor - 1)
+            else:
+                mm_params += pc["ffn"]
+        elif k == RECURRENT:
+            mm_params += pc["rnn"] + pc["ffn"]
+        elif k == SSM:
+            mm_params += pc["ssm"]
+    if cfg.is_encdec:
+        mm_params += cfg.n_enc_layers * (pc["attn"] + pc["ffn"])
+        mm_params += cfg.n_layers * (pc["attn"] // 2)   # cross-attn kv+q/o
+    head = cfg.d_model * cfg.vocab                       # logits matmul
+    flops = (mm_params + moe_overcompute + head) * 2 * toks * bwd_mult / tp
+
+    # ---- attention flops: 4*S_kv_eff per token per (qk+pv), fwd; x bwd_mult
+    attn_flops = 0.0
+    for k in kinds:
+        if k == ATTN_GLOBAL:
+            kv_eff = seq / 2
+        elif k == ATTN_LOCAL:
+            kv_eff = min(cfg.window or seq, seq)
+        else:
+            continue
+        attn_flops += 4 * toks * kv_eff * cfg.n_heads * cfg.hd
+    if cfg.is_encdec:
+        attn_flops += cfg.n_enc_layers * 4 * toks * seq * cfg.n_heads * cfg.hd
+        attn_flops += cfg.n_layers * 4 * toks * min(4096, seq) * cfg.n_heads * cfg.hd
+    # ssm: intra-chunk (c per token) + state (N per token), per head-dim
+    ssm_flops = 0.0
+    n_ssm = sum(1 for k in kinds if k == SSM)
+    if n_ssm:
+        chunk = 64
+        ssm_flops = n_ssm * toks * cfg.d_inner * (3 * chunk + 4 * cfg.ssm_state)
+    rnn_flops = sum(8 * toks * cfg.d_rnn for k in kinds if k == RECURRENT)
+    flops += (attn_flops + ssm_flops + rnn_flops) * bwd_mult / tp
+
+    # ---- HBM bytes -------------------------------------------------------
+    p_total = cfg.param_count()
+    p_local = p_total / (dp * tp)             # FSDP x TP sharded
+    # weights: fwd gather-read + bwd gather-read (bf16), grads f32 write+read,
+    # optimizer: read p,m,v + write p,m,v (f32)
+    w_bytes = p_local * (2 * 2 + 4 * 2) * max(1, n_micro) + p_local * 6 * 4
+    # activations saved across scan (remat full: one residual per layer) +
+    # recompute streams ~ 3x layer IO per microbatch
+    d = cfg.d_model
+    act_saved = len(kinds) * toks * d * 2     # bf16 residuals
+    act_stream = len(kinds) * toks * d * 2 * 6
+    # logits loss chunks: read hidden + head slice, write f32 chunk
+    loss_bytes = toks * (cfg.vocab / tp) * 4 * 2
+    hbm = w_bytes + (act_saved * 2 + act_stream) + loss_bytes
+
+    # ---- collective bytes --------------------------------------------------
+    coll = 0.0
+    ops = 0.0
+    notes = {}
+    p_bytes_bf16 = p_total * 2
+    p_bytes_f32 = p_total * 4
+    n_layers_all = len(kinds) + (cfg.n_enc_layers if cfg.is_encdec else 0)
+    n_leaves = n_layers_all * 10 + 4          # ~param tensors (op count)
+    if dp > 1:
+        ag = (dp - 1) / dp
+        # FSDP: all-gather params (fwd + bwd) per microbatch, reduce-scatter
+        # grads once per microbatch (f32, or int8+EF when compressed)
+        fsdp_ag = 2 * (p_bytes_bf16 / tp) * ag * max(1, n_micro)
+        rs_bytes = p_bytes_f32 * (0.25 if grad_compression == "int8" else 1.0)
+        fsdp_rs = (rs_bytes / tp) * ag * max(1, n_micro)
+        coll += fsdp_ag + fsdp_rs
+        notes["fsdp_ag"] = fsdp_ag
+        notes["fsdp_rs"] = fsdp_rs
+        if bucket_bytes:
+            n_buckets = max(1, int(p_bytes_f32 / tp / bucket_bytes))
+            ops += (2 + 1) * max(1, n_micro) * n_buckets
+            notes["grad_buckets"] = n_buckets
+        else:
+            ops += 3 * max(1, n_micro) * n_leaves
+    if mesh.pods > 1:
+        # hierarchical DP all-reduce of grads across pods (2x RS+AG)
+        pod_bytes = p_bytes_f32 * (0.25 if grad_compression == "int8" else 1.0)
+        pod_ar = 2 * (pod_bytes / (tp * dp / mesh.pods)) \
+            * (mesh.pods - 1) / mesh.pods
+        coll += pod_ar
+        notes["pod_allreduce"] = pod_ar
+        ops += (max(1, int(p_bytes_f32 / tp / bucket_bytes))
+                if bucket_bytes else n_leaves)
+    if tp > 1:
+        # TP: 2 activation ARs per layer fwd + 2 bwd (attn out + ffn out),
+        # AR wire = 2x payload.  Megatron-SP replaces each AR *pair* with one
+        # RS+AG on sequence-sharded residuals -> x0.5 wire.
+        tp_mult = 0.5 if sp_activations else 1.0
+        tp_ar = n_layers_all * 2 * 2 * (2 * toks * d) * (tp - 1) / tp * tp_mult
+        coll += tp_ar
+        notes["tp_allreduce"] = tp_ar
+        ops += n_layers_all * 4
+        if cfg.n_experts:
+            # EP (shard_map): per MoE layer one psum of the (T_l, d) combine
+            # (dtype per cfg.moe_combine_dtype), fwd + bwd, AR wire = 2x
+            cb = 2 if cfg.moe_combine_dtype == "bfloat16" else 4
+            ep = len(kinds) * 2 * 2 * (toks * d * cb) * (tp - 1) / tp
+            coll += ep
+            notes["ep_combine_psum"] = ep
+            ops += len(kinds) * 2
+    notes["coll_ops"] = int(ops)
+    notes["coll_latency_s"] = ops * COLL_LATENCY_S
+    return Terms(flops, hbm, coll + ops * COLL_LATENCY_S * LINK_BW_REF, notes)
+
+
+LINK_BW_REF = 50e9  # converts op latency into equivalent wire bytes
+
+
+def decode_step_terms(cfg: ModelConfig, *, seq: int, batch: int,
+                      mesh: MeshInfo,
+                      replicate_serve_weights: bool = False) -> Terms:
+    """One decode token against a seq-long cache, per device.
+
+    replicate_serve_weights — §Perf lever: keep bf16 weights replicated
+    across the data axis at serving time (they fit: params/tp per chip), so
+    decode pays NO per-step FSDP all-gather; only TP collectives remain.
+    """
+    dp, tp = mesh.dp, mesh.tp
+    b_local = max(1.0, batch / dp)
+    pc = _layer_param_counts(cfg)
+    kinds = cfg.layer_kinds()
+    mm_params = 0.0
+    for k in kinds:
+        if k in (ATTN_GLOBAL, ATTN_LOCAL):
+            mm_params += pc["attn"] + (pc["moe_active"] if cfg.n_experts
+                                       else pc["ffn"])
+        elif k == RECURRENT:
+            mm_params += pc["rnn"] + pc["ffn"]
+        elif k == SSM:
+            mm_params += pc["ssm"]
+    if cfg.is_encdec:
+        mm_params += cfg.n_layers * (pc["attn"] // 2)
+    head = cfg.d_model * cfg.vocab
+    flops = (mm_params + head) * 2 * b_local / tp
+
+    # attention reads the whole KV cache (the decode bottleneck)
+    kv_bytes = 0.0
+    attn_flops = 0.0
+    for k in kinds:
+        if k in (ATTN_GLOBAL, ATTN_LOCAL):
+            kv_eff = seq if k == ATTN_GLOBAL else min(cfg.window or seq, seq)
+            kv_bytes += 2 * b_local * kv_eff * cfg.n_kv_heads * cfg.hd * 2
+            attn_flops += 4 * b_local * kv_eff * cfg.n_heads * cfg.hd
+        elif k == RECURRENT:
+            kv_bytes += b_local * cfg.d_rnn * (4 + 2 * cfg.conv_width)
+            attn_flops += 8 * b_local * cfg.d_rnn
+        elif k == SSM:
+            kv_bytes += b_local * cfg.ssm_heads * cfg.ssm_headdim \
+                * cfg.ssm_state * 4 * 2
+            attn_flops += 4 * b_local * cfg.d_inner * cfg.ssm_state
+    flops += attn_flops / tp
+
+    p_bytes = cfg.param_count() * 2 / (dp * tp)   # bf16 weights read
+    # weights are FSDP-sharded; decode all-gathers them per step unless
+    # replicated for serving
+    coll = 0.0
+    ops = 0.0
+    notes = {}
+    if dp > 1 and not replicate_serve_weights:
+        ag = (dp - 1) / dp
+        coll += (cfg.param_count() * 2 / tp) * ag
+        notes["fsdp_ag"] = coll
+        ops += len(kinds) * 10
+    if tp > 1:
+        n_layers_all = len(kinds)
+        tp_ar = n_layers_all * 2 * (2 * b_local * cfg.d_model) * (tp - 1) / tp
+        coll += tp_ar
+        notes["tp_allreduce"] = tp_ar
+        ops += n_layers_all * 2
+    hbm = p_bytes * dp + kv_bytes / tp + b_local * cfg.vocab / tp * 4
+    # note: p_bytes*dp = full (tp-sharded) weights stream after the gather
+    notes["coll_ops"] = int(ops)
+    return Terms(flops, hbm, coll + ops * COLL_LATENCY_S * LINK_BW_REF, notes)
+
+
+def prefill_step_terms(cfg: ModelConfig, *, seq: int, batch: int,
+                       mesh: MeshInfo,
+                       sp_activations: bool = False) -> Terms:
+    t = train_step_terms(cfg, seq=seq, batch=batch, mesh=mesh, remat="none",
+                         n_micro=1)
+    # forward only: 1/3 of fwd+bwd flops; no optimizer/grad traffic
+    fwd = Terms(t.flops / 3.0, t.hbm_bytes * 0.35, 0.0, {})
+    dp, tp = mesh.dp, mesh.tp
+    coll = 0.0
+    if dp > 1:
+        coll += (cfg.param_count() * 2 / tp) * (dp - 1) / dp
+    if tp > 1:
+        toks = batch / dp * seq
+        coll += len(cfg.layer_kinds()) * 2 * (2 * toks * cfg.d_model) \
+            * (tp - 1) / tp * (0.5 if sp_activations else 1.0)
+    fwd.coll_bytes = coll
+    return fwd

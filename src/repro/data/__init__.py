@@ -1,0 +1,2 @@
+"""Data substrate: deterministic synthetic token pipeline."""
+from .pipeline import DataConfig, TokenPipeline

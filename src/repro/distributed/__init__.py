@@ -1,0 +1,6 @@
+"""Distribution: 2D FSDP x TP (+EP/SP) sharding rules, pipeline parallelism,
+coarsened collectives."""
+from .sharding import (
+    param_specs, param_shardings, batch_specs, cache_specs, make_shard_ctx)
+from .pipeline import pipeline_apply
+from .collectives import bucketed_psum

@@ -1,0 +1,178 @@
+"""Partition rules: 2D FSDP('data') x TP('model'), EP on 'model', SP for the
+long-context decode cells.  The 'pod' axis is an outer pure-DP dimension
+(params replicated across pods; gradients all-reduce hierarchically), which
+is the standard multi-pod layout when per-pod HBM already fits the sharded
+state.
+
+Rules are name+rank based so the same table covers stacked (period-scanned)
+and unstacked (tail) parameters: a leaf with more dims than its rule gets
+leading None axes (the stack dims are never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+
+D, M = "data", "model"
+
+# leaf-name -> trailing-dims spec (None entries = replicated dims)
+_RULES: dict[str, tuple] = {
+    "embed": (M, D),
+    "lm_head": (D, M),
+    # attention
+    "wq": (D, M), "wk": (D, M), "wv": (D, M), "wo": (M, D),
+    "bq": (M,), "bk": (M,), "bv": (M,),
+    # ffn
+    "w1": (D, M), "w3": (D, M), "w2": (M, D),
+    # moe (matched first via the 'moe' path component)
+    "moe/router": (D, None),
+    "moe/w1": (M, D, None), "moe/w3": (M, D, None), "moe/w2": (M, None, D),
+    "moe/shared_gate": (D, None),
+    # rg-lru
+    "wx": (D, M), "wgate": (D, M), "wr": (D, M), "wi": (D, M),
+    "br": (M,), "bi": (M,), "a_param": (M,),
+    # conv (width, channels)
+    "conv/w": (None, M), "conv/b": (M,),
+    # mamba
+    "in_proj": (D, M), "out_proj": (M, D),
+    "dt_bias": (None,), "a_log": (None,), "d_skip": (None,),
+    # norms
+    "scale": (None,),
+}
+
+
+def _leaf_rule(path: tuple, leaf, axis_sizes: Optional[dict] = None) -> tuple:
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    name = names[-1]
+    if "moe" in names and "shared" not in names and f"moe/{name}" in _RULES:
+        rule = _RULES[f"moe/{name}"]
+    elif "conv" in names and f"conv/{name}" in _RULES:
+        rule = _RULES[f"conv/{name}"]
+    elif name in _RULES:
+        rule = _RULES[name]
+    else:
+        rule = (None,) * leaf.ndim
+    pad = leaf.ndim - len(rule)
+    if pad < 0:
+        raise ValueError(f"rule {rule} longer than leaf {names} {leaf.shape}")
+    rule = (None,) * pad + tuple(rule)
+    if axis_sizes:
+        # argument shardings must divide exactly (pjit rejects padding on
+        # arguments): drop the axis on any non-divisible dim (e.g. vocab
+        # 256206 % 16 != 0 -> replicate that dim)
+        rule = tuple(
+            a if a is None or leaf.shape[i] % axis_sizes.get(a, 1) == 0
+            else None
+            for i, a in enumerate(rule))
+    return rule
+
+
+def param_specs(abstract: Any, mesh: Optional[Mesh] = None,
+                serve_replicated: bool = False) -> Any:
+    """Tree of PartitionSpec matching an abstract (or real) param tree.
+
+    serve_replicated: §Perf lever for decode — drop the FSDP ('data') axis so
+    bf16 weights are replicated across data shards (they fit: params/tp per
+    chip) and decode pays no per-step parameter all-gather.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None
+
+    def spec(p, l):
+        rule = _leaf_rule(p, l, sizes)
+        if serve_replicated:
+            rule = tuple(None if a == D else a for a in rule)
+        return P(*rule)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract)
+
+
+def param_shardings(abstract: Any, mesh: Mesh,
+                    serve_replicated: bool = False) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        param_specs(abstract, mesh, serve_replicated),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_shard_ctx(mesh: Mesh, sp=None) -> ShardCtx:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    return ShardCtx(dp=dp, tp=M, sp=sp, tp_size=axes[M], dp_size=dp_size,
+                    enabled=True, mesh=mesh,
+                    param_spec_fn=lambda p, l: P(*_leaf_rule(p, l)))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int) -> dict:
+    """PartitionSpecs for a training/prefill batch dict."""
+    dp = dp_axes(mesh)
+    dp_deg = 1
+    for a in dp:
+        dp_deg *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    bspec = dp if batch % dp_deg == 0 else None   # tiny batches replicate
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.is_encdec:
+        out["src_frames"] = P(bspec, None, None)
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = P(bspec, None, None)
+        out["pos3"] = P(bspec, None, None)          # (B, 3, S)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, *, batch: int,
+                seq: int) -> Any:
+    """Specs for the decode cache: shard kv-heads on 'model' when they
+    divide it, otherwise shard the SEQUENCE on 'model' (flash-decoding
+    style); batch on dp when divisible (long_500k: batch=1 -> SP over
+    'data' too)."""
+    dp = dp_axes(mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_deg = 1
+    for a in dp:
+        dp_deg *= axes[a]
+    tp_deg = axes[M]
+    bspec = dp if batch % dp_deg == 0 else None
+    heads_div = cfg.n_kv_heads >= tp_deg and cfg.n_kv_heads % tp_deg == 0
+    if heads_div:
+        kv_spec = P(None, bspec, None, M, None)       # (L,B,S,kv,hd)
+    elif bspec is None:
+        # batch=1 long-context: shard the sequence over data AND model (SP)
+        kv_spec = P(None, None, (*dp, M), None, None)
+    else:
+        kv_spec = P(None, bspec, M, None, None)       # seq on model
+
+    def spec_for(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v", "enc_k", "enc_v"):
+            return P(*kv_spec[5 - nd:]) if nd < 5 else kv_spec
+        if name == "conv":                             # (L,B,w-1,C)
+            return P(*((None,) * (nd - 1) + (M,)))
+        if name == "h":                                # (L,B,d)
+            return P(*((None,) * (nd - 1) + (M,)))
+        if name == "ssm":                              # (L,B,H,P,N)
+            return P(*((None,) * (nd - 3) + (M, None, None)))
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, _abstract_cache(cfg, batch, seq))
+
+
+def _abstract_cache(cfg, batch, seq):
+    from repro.models import model as MM
+    import jax.numpy as jnp
+    return jax.eval_shape(
+        lambda: MM.lm_init_cache(cfg, batch, seq, jnp.bfloat16,
+                                 enc_len=min(seq, 4096)))

@@ -1,0 +1,61 @@
+"""Sequential DP scan kernel (Pathfinder / dynamic-programming analog).
+
+dist[t] = cost[t] + min(dist[t-1] shifted {-1,0,+1})
+
+The time axis carries a dependence, so the grid is *sequential* and the carry
+(previous row) lives in persistent VMEM scratch.  Consecutive coarsening fuses
+C successive rows per program (fewer/wider DMAs, C-long serial chain inside).
+**Gapped coarsening is inapplicable** — interleaving non-adjacent rows breaks
+the carry — mirroring the paper's finding that kernels with cross-work-item
+synchronization (barriers) favour replication over coarsening (§IV.B.1).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+
+def make_kernel(rows: int, cols: int, cfg: CoarseningConfig, *,
+                interpret: bool = True) -> Callable:
+    if cfg.kind == KIND_GAPPED:
+        raise ValueError("gapped coarsening breaks the sequential carry of a "
+                         "DP scan (paper: barrier kernels favour replication)")
+    c = cfg.degree
+    if rows % c:
+        raise ValueError("rows not divisible by degree")
+    grid = rows // c
+
+    def body(cost_ref, o_ref, carry_ref):
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            carry_ref[...] = jnp.full_like(carry_ref, jnp.inf)
+
+        def step(k, prev):
+            row = cost_ref[k, :]
+            left = jnp.concatenate([prev[:1], prev[:-1]])
+            right = jnp.concatenate([prev[1:], prev[-1:]])
+            first = (t == 0) & (k == 0)
+            cur = jnp.where(
+                first, row,
+                row + jnp.minimum(prev, jnp.minimum(left, right)))
+            o_ref[k, :] = cur
+            return cur
+
+        carry_ref[...] = jax.lax.fori_loop(0, c, step, carry_ref[...])
+
+    spec = pl.BlockSpec((c, cols), lambda t: (t, 0))
+    call = pl.pallas_call(
+        body, grid=(grid,), in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cols,), jnp.float32)],
+        interpret=interpret,
+    )
+    return call

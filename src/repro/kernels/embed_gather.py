@@ -1,0 +1,70 @@
+"""Coarsened embedding gather — the paper's irregular-access pattern INSIDE
+the LM: out[i, :] = table[ids[i], :].
+
+This is `gather_stream` grown to model scale: the index stream (token ids) is
+regular and coarsenable; the row fetches are data-dependent.  The TPU-native
+structure is a *scalar-prefetch* grid: the ids block for each grid step is
+prefetched into SMEM, and the kernel gathers rows from the VMEM-resident
+table shard (the LSU-cache analog is explicit: vocab shards live in VMEM,
+hit rate = fraction of ids in this shard).
+
+  consecutive : one program owns C adjacent id-blocks -> one wide id DMA.
+  gapped      : C strided id-blocks -> C narrow id DMAs.
+
+For the full-vocab tables of the assigned archs the table stays in HBM/ANY
+on real hardware with per-row DMAs; in interpret mode we keep the table
+resident (correctness path) and `core.analysis.gather_cost` prices the
+realistic fetch, as with gather_stream (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import CoarseningConfig, plan_stream, flat_pid
+
+
+def make_kernel(n_ids: int, vocab: int, d: int, cfg: CoarseningConfig, *,
+                block: int = 256, interpret: bool = True) -> Callable:
+    """Build ids:(N,) table:(V,d) -> out:(N,d)."""
+    plan = plan_stream(n_ids, cfg, block=block)
+    c, b = cfg.degree, plan.block
+
+    def body(ids_ref, table_ref, o_ref):
+        ids = ids_ref[...].reshape(c * b)
+        rows = table_ref[...][ids]                  # in-VMEM row gather
+        o_ref[...] = rows.reshape(o_ref.shape)
+
+    ids_spec = pl.BlockSpec(plan.block_shape, plan.index_map)
+    # out blocks: same distribution with a trailing feature dim
+    if plan.contiguous:
+        out_view = (plan.grid, c, b, d)
+        out_spec = pl.BlockSpec((1, c, b, d), lambda i: (i, 0, 0, 0))
+    else:
+        out_view = (c, plan.grid, b, d)
+        out_spec = pl.BlockSpec((c, 1, b, d), lambda i: (0, i, 0, 0))
+
+    call = pl.pallas_call(
+        body,
+        grid=(plan.grid,),
+        in_specs=[ids_spec, pl.BlockSpec((vocab, d), lambda i: (0, 0))],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_view, jnp.float32),
+        interpret=interpret,
+    )
+
+    def run(ids, table):
+        out = call(ids.reshape(plan.view_shape), table)
+        if plan.contiguous:
+            return out.reshape(n_ids, d)
+        # gapped view: (C, G, B, d) -> logical order (G*B per slice)
+        return out.reshape(n_ids, d)
+
+    return run
+
+
+def ref_embed_gather(ids: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)

@@ -1,0 +1,134 @@
+"""The paper's Fig. 6 microbenchmark kernel, as a coarsenable Pallas kernel.
+
+Template:  load phase (n_loads streams) -> arithmetic phase (AI-controlled op
+chain) -> store phase.  Divergence variants mirror §III.C / Fig. 7:
+
+  base                no control flow
+  if_id               branch on the work-item id (direct divergence)
+  if_in               branch on a loaded value (indirect divergence)
+  for_const_if_id     constant-bound loop wrapping an id-branch
+  for_in_if_in        data-bound loop wrapping a data-branch
+  div2 / div4         if-in divergence degree 2 / 4 (paper Fig. 13)
+
+TPU adaptation notes (DESIGN.md §2): id-dependent predicates are trace-time
+iota patterns (foldable, cheap — the analog of the offline compiler exploiting
+known divergence); data-dependent predicates force predication of *all* paths;
+data-bound loops run to a static worst-case bound with per-iteration masks
+(the analog of the paper's pipeline-flush penalty).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import (
+    CoarseningConfig,
+    StreamPlan,
+    plan_stream,
+    pallas_stream_call,
+    flat_pid,
+    KIND_GAPPED,
+)
+
+VARIANTS = ("base", "if_id", "if_in", "for_const_if_id", "for_in_if_in",
+            "div2", "div4")
+FOR_CONST_TRIPS = 5
+FOR_IN_MAX_TRIPS = 8
+
+
+def _arith_chain(regs: list, n_arith: int) -> jax.Array:
+    """Bounded op chain: AI arithmetic ops per element (paper Fig. 6 body)."""
+    acc = regs[0]
+    n = len(regs)
+    for t in range(n_arith):
+        r = regs[(t + 1) % n]
+        m = t % 3
+        if m == 0:
+            acc = acc + r
+        elif m == 1:
+            acc = acc - r
+        else:
+            acc = acc * 0.5 + r * 0.5
+    return acc
+
+
+def _global_ids(plan: StreamPlan, i) -> jax.Array:
+    """Global element index of each (k, j) element of program i's tile."""
+    c, b, g = plan.cfg.degree, plan.block, plan.grid
+    k = jax.lax.broadcasted_iota(jnp.int32, (c, b), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (c, b), 1)
+    if plan.contiguous:
+        return (i * c + k) * b + j
+    return k * (g * b) + i * b + j
+
+
+def _variant_compute(variant: str, regs: list, gids: jax.Array,
+                     n_arith: int) -> jax.Array:
+    """Apply the divergence variant around the arithmetic chain."""
+    if variant == "base":
+        return _arith_chain(regs, n_arith)
+    if variant == "if_id":
+        taken = _arith_chain(regs, n_arith)
+        return jnp.where(gids % 2 == 0, taken, regs[0])
+    if variant == "if_in":
+        taken = _arith_chain(regs, n_arith)
+        pred = jnp.floor(jnp.abs(regs[-1]) * 16.0).astype(jnp.int32) % 2 == 0
+        return jnp.where(pred, taken, regs[0])
+    if variant == "for_const_if_id":
+        def body(_, acc):
+            taken = _arith_chain([acc] + regs[1:], max(1, n_arith // FOR_CONST_TRIPS))
+            return jnp.where(gids % 2 == 0, taken, acc)
+        return jax.lax.fori_loop(0, FOR_CONST_TRIPS, body, regs[0])
+    if variant == "for_in_if_in":
+        bound = jnp.floor(jnp.abs(regs[-1]) * 8.0).astype(jnp.int32) % FOR_IN_MAX_TRIPS
+        pred_in = jnp.floor(jnp.abs(regs[-2]) * 16.0).astype(jnp.int32) % 2 == 0
+
+        def body(t, acc):
+            live = t < bound
+            taken = _arith_chain([acc] + regs[1:], max(1, n_arith // FOR_IN_MAX_TRIPS))
+            return jnp.where(live & pred_in, taken, acc)
+        return jax.lax.fori_loop(0, FOR_IN_MAX_TRIPS, body, regs[0])
+    if variant in ("div2", "div4"):
+        deg = 2 if variant == "div2" else 4
+        sel = jnp.floor(jnp.abs(regs[-1]) * 16.0).astype(jnp.int32) % deg
+        per_path = max(1, n_arith)
+        out = _arith_chain(regs, per_path)
+        for p in range(1, deg):
+            alt = _arith_chain(regs[p % len(regs):] + regs[:p % len(regs)], per_path)
+            out = jnp.where(sel == p, alt, out)
+        return out
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def make_kernel(n: int, cfg: CoarseningConfig, *, n_loads: int = 8,
+                ai: int = 6, variant: str = "base",
+                block: int = 1024, interpret: bool = True) -> Callable:
+    """Build the coarsened streaming kernel: (in0..in{L-1}) -> out.
+
+    ai follows the paper: arithmetic-ops / memory-ops, memory ops =
+    n_loads + 1 store, so the chain has ai * (n_loads + 1) ops.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be in {VARIANTS}")
+    plan = plan_stream(n, cfg, block=block)
+    n_arith = ai * (n_loads + 1)
+
+    def body(*refs):
+        in_refs, o_ref = refs[:-1], refs[-1]
+        i = flat_pid(plan)
+        c, b = plan.cfg.degree, plan.block
+        regs = [r[...].reshape(c, b) for r in in_refs]
+        gids = _global_ids(plan, i)
+        out = _variant_compute(variant, regs, gids, n_arith)
+        o_ref[...] = out.reshape(o_ref.shape)
+
+    flops = n * n_arith
+    bytes_moved = n * 4 * (n_loads + 1)
+    cost = pl.CostEstimate(flops=flops, bytes_accessed=bytes_moved,
+                           transcendentals=0)
+    return pallas_stream_call(body, plan, n_loads, interpret=interpret,
+                              cost_estimate=cost)

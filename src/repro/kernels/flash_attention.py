@@ -1,0 +1,137 @@
+"""Flash attention with q-row-block coarsening (GQA / causal / local window).
+
+The q-row axis is the coarsenable "work-item" axis:
+
+  consecutive : one program owns C adjacent q blocks -> one (C*bq, D) DMA and
+                — because the fused rows are adjacent — the causal triangle
+                skip still prunes ~half the kv blocks.
+  gapped      : one program owns C q blocks strided S/C apart.  The fused rows
+                span the whole sequence, so the causal skip degenerates to the
+                worst row — the TPU analog of the paper's divergence penalty
+                (work-items with different control paths fused together).
+
+KV tiles are fetched once per fused program (paper §III.B: fewer total memory
+accesses) — consecutive coarsening divides kv traffic by C up to the causal
+skew.  GQA is expressed in the kv index_map (heads share kv tiles).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+NEG = -1e30
+
+
+def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
+                cfg: CoarseningConfig, *, bq: int = 128, bkv: int = 128,
+                causal: bool = True, window: int | None = None,
+                scale: float | None = None,
+                interpret: bool = True) -> Callable:
+    c = cfg.degree
+    if s % (c * bq) or s % bkv:
+        raise ValueError("seq not tileable")
+    gapped = cfg.kind == KIND_GAPPED
+    group = h // hkv
+    nq, nk = s // (c * bq), s // bkv
+    sg = s // c                       # gapped slice length
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    rows_per_prog = c * bq
+
+    def row_ids(qi):
+        j = jax.lax.broadcasted_iota(jnp.int32, (c, bq), 1)
+        k = jax.lax.broadcasted_iota(jnp.int32, (c, bq), 0)
+        if gapped:
+            return (k * sg + qi * bq + j).reshape(rows_per_prog)
+        return (qi * rows_per_prog + k * bq + j).reshape(rows_per_prog)
+
+    def body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        qi, ki = pl.program_id(2), pl.program_id(3)
+
+        @pl.when(ki == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        rows = row_ids(qi)                             # (R,)
+        cols = ki * bkv + jnp.arange(bkv, dtype=jnp.int32)
+        mask = jnp.ones((rows_per_prog, bkv), dtype=bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window is not None:
+            mask &= cols[None, :] > rows[:, None] - window
+
+        # causal block skip: only when *all* fused rows precede this kv block
+        min_row = rows[0] if not gapped else qi * bq   # smallest fused row id
+        live = jnp.bool_(True)
+        if causal:
+            live = ki * bkv <= (min_row + rows_per_prog - 1 if not gapped
+                                else (c - 1) * sg + qi * bq + bq - 1)
+        if window is not None:
+            # skip kv blocks entirely left of every fused row's window
+            live &= (ki + 1) * bkv > (min_row - (window or 0) + 1)
+
+        @pl.when(live)
+        def _compute():
+            q = q_ref[...].reshape(rows_per_prog, d)
+            kk = k_ref[...].reshape(bkv, d)
+            vv = v_ref[...].reshape(bkv, d)
+            sij = jnp.dot(q, kk.T, preferred_element_type=jnp.float32) * scale
+            sij = jnp.where(mask, sij, NEG)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, sij.max(axis=1))
+            p = jnp.exp(sij - m_new[:, None]) * mask
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+            acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                            + jnp.dot(p, vv, preferred_element_type=jnp.float32))
+            m_ref[...] = m_new
+
+        @pl.when(ki == nk - 1)
+        def _fin():
+            l = l_ref[...]
+            l = jnp.where(l == 0.0, 1.0, l)
+            o_ref[...] = (acc_ref[...] / l[:, None]).reshape(o_ref.shape)
+
+    kv_index = lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)
+    if gapped:
+        q_spec = pl.BlockSpec((1, 1, c, bq, d), lambda bb, hh, qi, ki: (bb, hh, 0, qi, 0))
+        q_view = lambda q: q.reshape(b, h, c, sg, d)
+        o_shape = (b, h, c, sg, d)
+        o_unview = lambda o: o.reshape(b, h, s, d)
+    else:
+        q_spec = pl.BlockSpec((1, 1, c * bq, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0))
+        q_view = lambda q: q
+        o_shape = (b, h, s, d)
+        o_unview = lambda o: o
+
+    call = pl.pallas_call(
+        body,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            q_spec,
+            pl.BlockSpec((1, 1, bkv, d), kv_index),
+            pl.BlockSpec((1, 1, bkv, d), kv_index),
+        ],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((rows_per_prog,), jnp.float32),
+            pltpu.VMEM((rows_per_prog,), jnp.float32),
+            pltpu.VMEM((rows_per_prog, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def run(q, k, v):
+        return o_unview(call(q_view(q), k, v))
+
+    return run

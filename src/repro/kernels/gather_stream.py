@@ -1,0 +1,78 @@
+"""Indirect-indexed (irregular) streaming kernel — paper Fig. 5(b).
+
+out[i] = chain(t0[idx[i]], ..., t{L-1}[idx[i]])
+
+The index stream is regular and coarsens exactly like ew_stream; the *data*
+accesses are data-dependent gathers that cannot be coalesced — the case where
+the paper finds coarsening wins collapse (F2) and the Intel compiler falls
+back to cached narrow LSUs.
+
+TPU adaptation: the LSU cache becomes a VMEM-resident table window.  For
+interpret-mode correctness the kernel keeps the whole table resident (one
+constant BlockSpec) and gathers in-VMEM; `core.analysis.gather_cost` prices
+the realistic windowed version (window DMA per step + per-miss HBM latency)
+according to the configured locality/hit-rate, which is what the Fig. 12
+benchmark sweeps.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import CoarseningConfig, plan_stream, stream_view, unstream_view
+
+
+def make_indices(n: int, table: int, locality_window: int, seed: int = 0) -> np.ndarray:
+    """Paper §III.C index generator: irregularity via a locality window.
+
+    Each index block of ``locality_window`` stream positions draws from a
+    random contiguous table window of the same size (randomized base --
+    'a, b randomized starting indexes', Fig. 5b).  window == table  ->  fully
+    random (irregularity degree 1); window small -> high locality.
+    """
+    rng = np.random.default_rng(seed)
+    w = max(1, min(locality_window, table))
+    n_blocks = (n + w - 1) // w
+    bases = rng.integers(0, max(1, table - w), size=n_blocks)
+    offs = rng.integers(0, w, size=n)
+    blk = np.repeat(bases, w)[:n]
+    return ((blk + offs) % table).astype(np.int32)
+
+
+def make_kernel(n: int, table: int, cfg: CoarseningConfig, *, n_loads: int = 8,
+                ai: int = 6, block: int = 1024,
+                interpret: bool = True) -> Callable:
+    from repro.kernels.ew_stream import _arith_chain
+
+    plan = plan_stream(n, cfg, block=block)
+    n_arith = ai * (n_loads + 1)
+
+    def body(idx_ref, *refs):
+        table_refs, o_ref = refs[:-1], refs[-1]
+        c, b = plan.cfg.degree, plan.block
+        idx = idx_ref[...].reshape(c * b)
+        # in-VMEM gather (LSU-cache hit path)
+        regs = [t_ref[...][idx].reshape(c, b) for t_ref in table_refs]
+        out = _arith_chain(regs, n_arith)
+        o_ref[...] = out.reshape(o_ref.shape)
+
+    stream_spec = pl.BlockSpec(plan.block_shape, plan.index_map)
+    table_spec = pl.BlockSpec((table,), lambda i: (0,))
+    call = pl.pallas_call(
+        body,
+        grid=(plan.grid,),
+        in_specs=[stream_spec] + [table_spec] * n_loads,
+        out_specs=stream_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.view_shape, jnp.float32),
+        interpret=interpret,
+    )
+
+    def run(idx, *tables):
+        out = call(stream_view(idx, plan), *tables)
+        return unstream_view(out, plan)
+
+    return run

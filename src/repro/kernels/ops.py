@@ -1,0 +1,147 @@
+"""jit'd public wrappers for every kernel family.
+
+Each op takes a CoarseningConfig and dispatches to the Pallas kernel
+(interpret=True on CPU; on TPU the same pallas_call lowers via Mosaic) or, for
+``backend='ref'``, to the pure-jnp oracle — the path used by model training
+on CPU and by the XLA dry-run lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coarsening import CoarseningConfig
+from repro.kernels import (
+    ew_stream as _ew,
+    gather_stream as _gather,
+    matmul as _matmul,
+    stencil as _stencil,
+    chunk_scan as _scan,
+    flash_attention as _flash,
+    ssd as _ssd,
+    rglru as _rglru,
+    ref,
+)
+
+BASE = CoarseningConfig()
+
+
+@functools.lru_cache(maxsize=256)
+def _ew_fn(n, cfg, n_loads, ai, variant, block):
+    return jax.jit(_ew.make_kernel(n, cfg, n_loads=n_loads, ai=ai,
+                                   variant=variant, block=block))
+
+
+def ew_stream(inputs, cfg: CoarseningConfig = BASE, *, ai: int = 6,
+              variant: str = "base", block: int = 1024):
+    fn = _ew_fn(inputs[0].shape[0], cfg, len(inputs), ai, variant, block)
+    return fn(*inputs)
+
+
+@functools.lru_cache(maxsize=256)
+def _gather_fn(n, table, cfg, n_loads, ai, block):
+    return jax.jit(_gather.make_kernel(n, table, cfg, n_loads=n_loads, ai=ai,
+                                       block=block))
+
+
+def gather_stream(idx, tables, cfg: CoarseningConfig = BASE, *, ai: int = 6,
+                  block: int = 1024):
+    fn = _gather_fn(idx.shape[0], tables[0].shape[0], cfg, len(tables), ai, block)
+    return fn(idx, *tables)
+
+
+@functools.lru_cache(maxsize=256)
+def _matmul_fn(m, n, k, cfg, bm, bn, bk, backend):
+    if backend == "ref":
+        return jax.jit(ref.matmul)
+    return jax.jit(_matmul.make_kernel(m, n, k, cfg, bm=bm, bn=bn, bk=bk))
+
+
+def matmul(a, b, cfg: CoarseningConfig = BASE, *, bm: int = 128, bn: int = 128,
+           bk: int = 256, backend: str = "pallas"):
+    m, k = a.shape
+    n = b.shape[1]
+    return _matmul_fn(m, n, k, cfg, bm, bn, bk, backend)(a, b)
+
+
+@functools.lru_cache(maxsize=256)
+def _stencil_fn(rows, cols, cfg, block_rows):
+    return jax.jit(_stencil.make_kernel(rows, cols, cfg, block_rows=block_rows))
+
+
+def stencil5(x, cfg: CoarseningConfig = BASE, *, block_rows: int = 8):
+    return _stencil_fn(x.shape[0], x.shape[1], cfg, block_rows)(x)
+
+
+@functools.lru_cache(maxsize=256)
+def _scan_fn(rows, cols, cfg):
+    return jax.jit(_scan.make_kernel(rows, cols, cfg))
+
+
+def dp_scan(cost, cfg: CoarseningConfig = BASE):
+    return _scan_fn(cost.shape[0], cost.shape[1], cfg)(cost)
+
+
+@functools.lru_cache(maxsize=256)
+def _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend):
+    if backend == "ref":
+        return jax.jit(functools.partial(ref.attention, causal=causal,
+                                         window=window))
+    return jax.jit(_flash.make_kernel(b, h, hkv, s, d, cfg, bq=bq, bkv=bkv,
+                                      causal=causal, window=window))
+
+
+def flash_attention(q, k, v, cfg: CoarseningConfig = BASE, *, bq: int = 128,
+                    bkv: int = 128, causal: bool = True,
+                    window: int | None = None, backend: str = "pallas"):
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    return _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend)(q, k, v)
+
+
+@functools.lru_cache(maxsize=256)
+def _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend):
+    if backend == "ref":
+        def run(x, dt, a, bmat, cmat):
+            # kernel layout (B,H,S,P) -> ref layout (B,S,H,P)
+            y = ref.ssd(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), a,
+                        bmat.transpose(0, 2, 1, 3), cmat.transpose(0, 2, 1, 3))
+            return y.transpose(0, 2, 1, 3)
+        return jax.jit(run)
+    return jax.jit(_ssd.make_kernel(b, h, g, s, p, n, cfg, chunk=chunk))
+
+
+def ssd(x, dt, a, bmat, cmat, cfg: CoarseningConfig = BASE, *,
+        chunk: int = 64, backend: str = "pallas"):
+    """x:(B,H,S,P) dt:(B,H,S) a:(H,) bmat/cmat:(B,G,S,N)."""
+    b, h, s, p = x.shape
+    g, n = bmat.shape[1], bmat.shape[3]
+    return _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend)(x, dt, a, bmat, cmat)
+
+
+@functools.lru_cache(maxsize=256)
+def _embed_fn(n, vocab, d, cfg, block):
+    from repro.kernels import embed_gather as _eg
+    return jax.jit(_eg.make_kernel(n, vocab, d, cfg, block=block))
+
+
+def embed_gather(ids, table, cfg: CoarseningConfig = BASE, *,
+                 block: int = 256):
+    return _embed_fn(ids.shape[0], table.shape[0], table.shape[1], cfg,
+                     block)(ids, table)
+
+
+@functools.lru_cache(maxsize=256)
+def _rglru_fn(b, s, d, cfg, block_d, block_t, backend):
+    if backend == "ref":
+        return jax.jit(ref.rglru)
+    return jax.jit(_rglru.make_kernel(b, s, d, cfg, block_d=block_d,
+                                      block_t=block_t))
+
+
+def rglru(x, r, i, a_param, cfg: CoarseningConfig = BASE, *,
+          block_d: int = 128, block_t: int = 64, backend: str = "pallas"):
+    b, s, d = x.shape
+    return _rglru_fn(b, s, d, cfg, block_d, block_t, backend)(x, r, i, a_param)

@@ -1,0 +1,118 @@
+"""Mamba-2 SSD (state-space duality) chunked kernel, head-coarsenable.
+
+The sequence is processed in chunks with a persistent VMEM state carry — the
+chunk axis is *sequential* (like the paper's barrier kernels, gapped
+coarsening over chunks is inapplicable).  The coarsenable "work-item" axis is
+the HEAD axis (independent):
+
+  consecutive : C adjacent heads fused per program.  Heads in the same group
+                share B/C projections, so the B/C tile is fetched ONCE for all
+                C heads — the exact burst-coalescing story of the paper
+                (requires group_size % C == 0).
+  gapped      : C heads strided H/C apart — only valid for n_groups == 1
+                (else the strided heads need C distinct B/C fetches).
+
+Inputs (kernel layout):  x:(B,H,S,P)  dt:(B,H,S)  A:(H,)  B,C:(B,G,S,N)
+Chunk recurrence (matching ref.ssd):
+  y[t]   = Σ_{u<=t, same chunk} Cb[t]·Bb[u] e^{cum[t]-cum[u]} dt[u] x[u]
+         + Cb[t] e^{cum[t]} · state
+  state' = e^{cum[-1]} state + Σ_u Bb[u] dt[u] e^{cum[-1]-cum[u]} x[u]
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+
+def make_kernel(b: int, h: int, g: int, s: int, p: int, n: int,
+                cfg: CoarseningConfig, *, chunk: int = 64,
+                interpret: bool = True) -> Callable:
+    c = cfg.degree
+    rep = h // g
+    gapped = cfg.kind == KIND_GAPPED
+    if s % chunk:
+        raise ValueError("seq not divisible by chunk")
+    if gapped and g != 1:
+        raise ValueError("gapped head-coarsening requires n_groups == 1")
+    if not gapped and c > 1 and rep % c != 0:
+        raise ValueError("consecutive head-coarsening requires group_size % C == 0")
+    if h % c:
+        raise ValueError("heads not divisible by degree")
+    nh, nc = h // c, s // chunk
+
+    def body(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref):
+        ci = pl.program_id(2)
+
+        @pl.when(ci == 0)
+        def _init():
+            state_ref[...] = jnp.zeros_like(state_ref)
+
+        xs = x_ref[...].reshape(c, chunk, p)
+        dts = dt_ref[...].reshape(c, chunk)
+        aa = a_ref[...].reshape(c)
+        bb = b_ref[...].reshape(chunk, n)
+        cc = c_ref[...].reshape(chunk, n)
+
+        dA = dts * aa[:, None]                       # (c, ck) log decay
+        cum = jnp.cumsum(dA, axis=1)                 # (c, ck)
+        tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        L = jnp.where(tri[None], jnp.exp(cum[:, :, None] - cum[:, None, :]), 0.0)
+        cb = jnp.dot(cc, bb.T, preferred_element_type=jnp.float32)  # (ck, ck)
+        w = cb[None] * L * dts[:, None, :]           # (c, ck, ck)
+        y_intra = jnp.einsum("ctu,cup->ctp", w, xs)
+        decay_out = jnp.exp(cum)                     # (c, ck)
+        y_state = jnp.einsum("ctn,cnp->ctp",
+                             cc[None] * decay_out[:, :, None], state_ref[...])
+        o_ref[...] = (y_intra + y_state).reshape(o_ref.shape)
+
+        total = cum[:, -1]                           # (c,)
+        w_in = dts * jnp.exp(total[:, None] - cum)   # (c, ck)
+        upd = jnp.einsum("ctn,ctp->cnp", bb[None] * w_in[:, :, None], xs)
+        state_ref[...] = jnp.exp(total)[:, None, None] * state_ref[...] + upd
+
+    if gapped:
+        x_spec = pl.BlockSpec((1, c, 1, chunk, p), lambda bb_, hh, ci: (bb_, 0, hh, ci, 0))
+        dt_spec = pl.BlockSpec((1, c, 1, chunk), lambda bb_, hh, ci: (bb_, 0, hh, ci))
+        a_spec = pl.BlockSpec((c, 1), lambda bb_, hh, ci: (0, hh))
+        xv = lambda x: x.reshape(b, c, nh, s, p)
+        dtv = lambda d: d.reshape(b, c, nh, s)
+        av = lambda a: a.reshape(c, nh)
+        o_shape = (b, c, nh, s, p)
+        ounv = lambda o: o.reshape(b, h, s, p)
+        bc_index = lambda bb_, hh, ci: (bb_, 0, ci, 0)
+    else:
+        x_spec = pl.BlockSpec((1, c, chunk, p), lambda bb_, hh, ci: (bb_, hh, ci, 0))
+        dt_spec = pl.BlockSpec((1, c, chunk), lambda bb_, hh, ci: (bb_, hh, ci))
+        a_spec = pl.BlockSpec((c,), lambda bb_, hh, ci: (hh,))
+        xv = lambda x: x
+        dtv = lambda d: d
+        av = lambda a: a
+        o_shape = (b, h, s, p)
+        ounv = lambda o: o
+        bc_index = lambda bb_, hh, ci: (bb_, (hh * c) // rep, ci, 0)
+
+    call = pl.pallas_call(
+        body,
+        grid=(b, nh, nc),
+        in_specs=[
+            x_spec, dt_spec, a_spec,
+            pl.BlockSpec((1, 1, chunk, n), bc_index),
+            pl.BlockSpec((1, 1, chunk, n), bc_index),
+        ],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, n, p), jnp.float32)],
+        interpret=interpret,
+    )
+
+    def run(x, dt, a, bmat, cmat):
+        """x:(B,H,S,P) dt:(B,H,S) a:(H,) bmat/cmat:(B,G,S,N) -> (B,H,S,P)."""
+        return ounv(call(xv(x), dtv(dt), av(a), bmat, cmat))
+
+    return run

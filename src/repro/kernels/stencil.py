@@ -1,0 +1,68 @@
+"""5-point stencil kernel (Hotspot / structured-grid analog).
+
+Row-blocked with coarsening over row blocks.  Halo handling: the vertical
+neighbours are passed as pre-shifted copies of the input (an XLA-level roll),
+so every variant (consecutive/gapped) uses the identical stream machinery —
+the halo cost appears as 3 input streams instead of 1, which
+`core.analysis.stream_cost` prices with n_loads=3.  Horizontal neighbours are
+in-block shifts (columns fully resident).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+COEF = (0.5, 0.125, 0.125, 0.125, 0.125)  # center, n, s, w, e
+
+
+def _shifted(x: jax.Array):
+    up = jnp.concatenate([x[:1], x[:-1]], axis=0)     # row i-1 (edge pad)
+    dn = jnp.concatenate([x[1:], x[-1:]], axis=0)     # row i+1
+    return up, dn
+
+
+def make_kernel(rows: int, cols: int, cfg: CoarseningConfig, *,
+                block_rows: int = 8, interpret: bool = True) -> Callable:
+    c = cfg.degree
+    if rows % (c * block_rows):
+        raise ValueError("rows not tileable")
+    grid = rows // (c * block_rows)
+    gapped = cfg.kind == KIND_GAPPED
+    c0, cn, cs, cw, ce = COEF
+
+    def body(x_ref, up_ref, dn_ref, o_ref):
+        x = x_ref[...].reshape(c * block_rows, cols)
+        up = up_ref[...].reshape(c * block_rows, cols)
+        dn = dn_ref[...].reshape(c * block_rows, cols)
+        w = jnp.concatenate([x[:, :1], x[:, :-1]], axis=1)
+        e = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+        o_ref[...] = (c0 * x + cn * up + cs * dn + cw * w + ce * e
+                      ).reshape(o_ref.shape)
+
+    if gapped:
+        spec = pl.BlockSpec((c, block_rows, cols), lambda i: (0, i, 0))
+        view = lambda a: a.reshape(c, rows // c, cols)
+        o_shape = (c, rows // c, cols)
+        unview = lambda o: o.reshape(rows, cols)
+    else:
+        spec = pl.BlockSpec((c * block_rows, cols), lambda i: (i, 0))
+        view = lambda a: a
+        o_shape = (rows, cols)
+        unview = lambda o: o
+
+    call = pl.pallas_call(
+        body, grid=(grid,), in_specs=[spec] * 3, out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        interpret=interpret,
+    )
+
+    def run(x):
+        up, dn = _shifted(x)
+        return unview(call(view(x), view(up), view(dn)))
+
+    return run

@@ -1,0 +1,109 @@
+"""Windowed gather with scalar-prefetched, data-dependent window fetches —
+the faithful TPU implementation of the paper's cached LSU (Fig. 5b / Fig. 12).
+
+Unlike `gather_stream` (whole-table-resident correctness path), each grid
+step DMAs only a 2L-wide, L-aligned window of the table selected by a
+PREFETCHED per-block base row — Pallas's scalar-prefetch mechanism, the
+TPU-native data-dependent block fetch.  The LSU-cache analogy is exact:
+
+  window residency  = the LSU cache line(s)
+  locality L        = the paper's irregularity degree
+  per-slice windows = gapped coarsening needs C distinct windows per program
+                      (C narrow cached LSUs); consecutive programs share
+                      locality and fetch C windows of ADJACENT id-blocks
+
+Constraints: indices must come from `gather_stream.make_indices(n, V, L)`
+(each L-long run of stream positions draws from one L-wide table window) and
+the stream block B must satisfy B <= L, L % B == 0, so each fused slice's
+indices fit one aligned 2L window.  The table is viewed (V/L, L) and the
+window BlockSpec is (2, L) with a prefetched row index — an L-aligned 2L-wide
+fetch always covers an arbitrary L-window.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coarsening import CoarseningConfig, plan_stream
+
+
+def make_kernel(n: int, table: int, cfg: CoarseningConfig, *,
+                window: int = 1024, block: int = 256, ai: int = 6,
+                interpret: bool = True) -> Callable:
+    from repro.kernels.ew_stream import _arith_chain
+
+    if block > window or window % block or table % window:
+        raise ValueError("need block <= window, window % block == 0, "
+                         "table % window == 0")
+    plan = plan_stream(n, cfg, block=block)
+    c, b, g = cfg.degree, plan.block, plan.grid
+    n_rows = table // window
+    n_arith = ai * 2                      # 1 load + 1 store
+
+    def body(bases_ref, idx_ref, *refs):
+        win_refs, o_ref = refs[:-1], refs[-1]
+        i = pl.program_id(0)
+        idx = idx_ref[...].reshape(c, b)
+        outs = []
+        for k in range(c):
+            base_row = bases_ref[i, k]
+            local = idx[k] - base_row * window
+            # two row-granular fetches = the 2L-wide L-aligned window
+            rows = jnp.concatenate(
+                [win_refs[2 * k][...].reshape(window),
+                 win_refs[2 * k + 1][...].reshape(window)])
+            outs.append(rows[local])
+        vals = jnp.stack(outs)            # (C, B)
+        o_ref[...] = _arith_chain([vals], n_arith).reshape(o_ref.shape)
+
+    idx_spec = pl.BlockSpec(plan.block_shape, lambda i, bases: plan.index_map(i))
+    # (1, L) blocks index in single-row units -> row-granular placement;
+    # each slice fetches rows base and base+1 of the (V/L, L) table view
+    win_specs = []
+    for k in range(c):
+        win_specs.append(pl.BlockSpec(
+            (1, window), lambda i, bases, k=k: (bases[i, k], 0)))
+        win_specs.append(pl.BlockSpec(
+            (1, window), lambda i, bases, k=k: (bases[i, k] + 1, 0)))
+    out_spec = pl.BlockSpec(plan.block_shape, lambda i, bases: plan.index_map(i))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(plan.grid,),
+        in_specs=[idx_spec] + win_specs,
+        out_specs=out_spec,
+    )
+    call = pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(plan.view_shape, jnp.float32),
+        interpret=interpret,
+    )
+
+    def plan_bases(idx: np.ndarray) -> np.ndarray:
+        """Host-side planner: window base row per (program, slice)."""
+        view = np.asarray(idx).reshape(plan.view_shape)     # (G,C,B)|(C,G,B)
+        if plan.contiguous:
+            mins = view.min(axis=2)                         # (G, C)
+        else:
+            mins = view.min(axis=2).T                       # (C, G) -> (G, C)
+        bases = np.minimum(mins // window, n_rows - 2)
+        return bases.astype(np.int32)
+
+    def run(idx, tbl):
+        bases = jnp.asarray(plan_bases(np.asarray(idx)))
+        wins = [tbl.reshape(n_rows, window)] * (2 * c)
+        out = call(bases, idx.reshape(plan.view_shape), *wins)
+        return out.reshape(n)
+
+    return run
+
+
+def ref(idx, tbl, ai: int = 6):
+    from repro.kernels.ew_stream import _arith_chain
+    vals = tbl[idx].reshape(1, -1)
+    return _arith_chain([vals], ai * 2).reshape(-1)

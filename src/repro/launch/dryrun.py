@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as its own process (the two lines above run before any jax
+import, because jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+
+For each cell it prints memory_analysis() and cost_analysis() (proving fit
+and providing the §Roofline terms) and writes a JSON artifact under
+experiments/dryrun/.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, TRAIN_N_MICRO, get_config
+from repro.core import rooflines
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import StepConfig, build_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_skip_reason(arch: str, shape: str) -> str | None:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return "pure full-attention arch: long_500k skipped (DESIGN.md)"
+    return None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    overrides = dict(overrides or {})
+    cfg = get_config(arch)
+    # model-level (not StepConfig) overrides
+    if overrides.get("moe_combine_bf16"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe_combine_dtype="bfloat16")
+    sh = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    kw = {k: v for k, v in overrides.items() if k != "moe_combine_bf16"}
+    if sh["kind"] == "train" and "n_micro" not in kw:
+        kw["n_micro"] = TRAIN_N_MICRO.get(arch, 4)
+    sc = StepConfig(seq=sh["seq"], batch=sh["batch"], kind=sh["kind"], **kw)
+    fn, abstract, in_sh, out_sh = build_step(cfg, mesh, sc)
+
+    t0 = time.time()
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[sc.kind]
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*abstract)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in (ca or {}).items()
+           if k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    coll = rooflines.collective_bytes(hlo)
+
+    # model flops: 6 N D for train (fwd+bwd), 2 N D for inference fwd
+    n_active = cfg.active_param_count()
+    tokens = sh["batch"] * (sh["seq"] if sc.kind in ("train", "prefill") else 1)
+    mf = (6 if sc.kind == "train" else 2) * n_active * tokens
+    roof = rooflines.analyze(compiled, hlo, chips, model_flops=mf)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": sc.kind,
+        "compile_s": round(t1 - t0, 1),
+        "argument_size": getattr(mem, "argument_size_in_bytes", None),
+        "output_size": getattr(mem, "output_size_in_bytes", None),
+        "temp_size": getattr(mem, "temp_size_in_bytes", None),
+        "flops": roof.flops,
+        "bytes_accessed": roof.bytes_accessed,
+        "collective_bytes": roof.coll_bytes,
+        "collectives": coll,
+        "compute_s": roof.compute_s,
+        "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s,
+        "bound": roof.bound,
+        "model_flops": mf,
+        "useful_ratio": roof.useful_ratio,
+        "overrides": overrides or {},
+    }
+    os.makedirs(ART_DIR, exist_ok=True)
+    suffix = "_".join(f"{k}-{v}" for k, v in (overrides or {}).items())
+    name = f"{arch}_{shape}_{rec['mesh']}" + (f"_{suffix}" if suffix else "")
+    with open(os.path.join(ART_DIR, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS)
+    ap.add_argument("--shape", default=None, choices=tuple(SHAPES))
+    ap.add_argument("--multi-pod", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--sp-activations", action="store_true")
+    ap.add_argument("--xkv-precompute", action="store_true")
+    ap.add_argument("--replicate-serve-weights", action="store_true")
+    ap.add_argument("--moe-combine-bf16", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.n_micro is not None:
+        overrides["n_micro"] = args.n_micro
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+    if args.sp_activations:
+        overrides["sp_activations"] = True
+    if args.xkv_precompute:
+        overrides["xkv_precompute"] = True
+    if args.replicate_serve_weights:
+        overrides["replicate_serve_weights"] = True
+    if args.moe_combine_bf16:
+        overrides["moe_combine_bf16"] = True
+
+    archs = ARCHS if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    pods = {"single": (False,), "multi": (True,),
+            "both": (False, True)}[args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            reason = cell_skip_reason(arch, shape)
+            if reason:
+                print(f"SKIP {arch} x {shape}: {reason}")
+                continue
+            for mp in pods:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp, overrides or None)
+                    print(f"OK   {tag}: bound={rec['bound']} "
+                          f"compute={rec['compute_s']:.3e}s "
+                          f"memory={rec['memory_s']:.3e}s "
+                          f"coll={rec['collective_s']:.3e}s "
+                          f"(compile {rec['compile_s']}s)")
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Step builders shared by train.py, serve.py and dryrun.py.
+
+Each builder returns (fn, abstract_args, in_shardings, out_shardings) so the
+dry-run can .lower().compile() with ShapeDtypeStructs (no allocation) and the
+real drivers can jit the same fn with live arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, accumulate_grads
+from repro.distributed.sharding import (
+    param_specs, param_shardings, batch_specs, cache_specs, make_shard_ctx,
+    dp_axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    seq: int
+    batch: int                   # global batch (rows)
+    kind: str = "train"          # train | prefill | decode
+    n_micro: int = 1
+    remat: str = "full"
+    opt: AdamWConfig = AdamWConfig()
+    enc_len: int = 4096          # enc-dec cross-attention source length
+    param_dtype: str = "float32"
+    serve_dtype: str = "bfloat16"
+    # §Perf hillclimb levers (flag-gated so baseline/optimized both lower)
+    sp_activations: bool = False         # Megatron-SP residual sharding
+    xkv_precompute: bool = False         # enc-dec: cross-K/V outside scan
+    replicate_serve_weights: bool = False  # decode: no FSDP gather
+
+
+def _named(mesh, tree_of_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_batch(cfg: ModelConfig, sc: StepConfig):
+    b, s = sc.batch, sc.seq
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    if cfg.is_encdec:
+        batch["src_frames"] = sds((b, min(sc.enc_len, s), cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        batch["pos3"] = sds((b, 3, s), i32)          # (B,3,S): microbatchable
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    tree = jax.eval_shape(lambda: M.lm_init(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.dtype(dtype)), tree)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, sc: StepConfig):
+    shard = make_shard_ctx(mesh, sp="model" if sc.sp_activations else None)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return M.lm_loss(p, b, cfg, shard=shard, remat=sc.remat,
+                             xkv_precompute=sc.xkv_precompute)
+
+        loss, grads, metrics = accumulate_grads(loss_fn, params, batch,
+                                                sc.n_micro)
+        params, opt_state, gn = adamw_update(params, grads, opt_state, sc.opt)
+        return params, opt_state, loss, gn
+
+    p_abs = abstract_params(cfg)
+    o_abs = jax.eval_shape(adamw_init, p_abs)
+    b_abs = abstract_batch(cfg, sc)
+
+    psh = param_shardings(p_abs, mesh)
+    osh = {"m": psh, "v": psh,
+           "step": NamedSharding(mesh, P())}
+    bsh = _named(mesh, batch_specs(cfg, mesh, batch=sc.batch))
+    scalar = NamedSharding(mesh, P())
+    return (train_step, (p_abs, o_abs, b_abs), (psh, osh, bsh),
+            (psh, osh, scalar, scalar))
+
+
+# ---------------------------------------------------------------------------
+# prefill (inference forward; logits for the last position)
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, sc: StepConfig):
+    shard = make_shard_ctx(mesh, sp="model" if sc.sp_activations else None)
+
+    def prefill_step(params, batch):
+        hidden, _ = M.lm_apply(params, batch, cfg, shard=shard, remat="none")
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (hidden[:, -1] @ head.astype(hidden.dtype))
+        return logits.astype(jnp.float32)[:, : cfg.vocab]
+
+    p_abs = abstract_params(cfg, dtype=sc.serve_dtype)
+    b_abs = abstract_batch(cfg, sc)
+    b_abs.pop("labels")
+    psh = param_shardings(p_abs, mesh)
+    bspecs = batch_specs(cfg, mesh, batch=sc.batch)
+    bspecs.pop("labels")
+    bsh = _named(mesh, bspecs)
+    out = NamedSharding(mesh, P(dp_axes(mesh), _vocab_axis(cfg, mesh)))
+    return prefill_step, (p_abs, b_abs), (psh, bsh), out
+
+
+def _vocab_axis(cfg, mesh):
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    return "model" if cfg.vocab % tp == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a seq-long cache)
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, sc: StepConfig):
+    shard = make_shard_ctx(mesh)
+
+    def serve_step(params, cache, tokens, pos):
+        return M.lm_decode_step(params, cache, tokens, pos, cfg, shard=shard)
+
+    b = sc.batch
+    p_abs = abstract_params(cfg, dtype=sc.serve_dtype)
+    c_abs = jax.eval_shape(
+        lambda: M.lm_init_cache(cfg, b, sc.seq, jnp.bfloat16,
+                                enc_len=min(sc.enc_len, sc.seq)))
+    t_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    psh = param_shardings(p_abs, mesh,
+                          serve_replicated=sc.replicate_serve_weights)
+    csh = _named(mesh, cache_specs(cfg, mesh, batch=b, seq=sc.seq))
+    dp = dp_axes(mesh)
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_deg = 1
+    for a in dp:
+        dp_deg *= axes[a]
+    bspec = dp if b % dp_deg == 0 else None
+    tsh = NamedSharding(mesh, P(bspec, None))
+    possh = NamedSharding(mesh, P(bspec))
+    logits_sh = NamedSharding(mesh, P(bspec, _vocab_axis(cfg, mesh)))
+    return (serve_step, (p_abs, c_abs, t_abs, pos_abs),
+            (psh, csh, tsh, possh), (logits_sh, csh))
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, sc: StepConfig):
+    if sc.kind == "train":
+        return build_train_step(cfg, mesh, sc)
+    if sc.kind == "prefill":
+        return build_prefill_step(cfg, mesh, sc)
+    if sc.kind == "decode":
+        return build_serve_step(cfg, mesh, sc)
+    raise ValueError(sc.kind)

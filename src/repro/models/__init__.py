@@ -1,0 +1,8 @@
+"""Model stack: all 10 assigned architectures through one functional API.
+
+  config.py — ModelConfig (+ layer patterns, MoE/SSM/enc-dec fields)
+  layers.py — norms, RoPE/M-RoPE, conv, chunked attention, FFN, MoE (+EP)
+  blocks.py — attention / RG-LRU / Mamba-2 / enc-dec residual blocks
+  model.py  — lm_init/lm_apply/lm_loss/lm_decode_step with period scanning
+"""
+from repro.models.config import ModelConfig

@@ -1,0 +1,321 @@
+"""Residual blocks for every assigned architecture family.
+
+Layer stacking uses *period scanning* (models/model.py): parameters of layers
+at the same position within the repeating pattern period are stacked and the
+model scans over periods — compile-time stays O(period), not O(n_layers),
+which keeps 80 dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig, ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, SSM
+from repro.models import layers as L
+from repro.models.layers import ShardCtx, NOSHARD
+
+
+# ---------------------------------------------------------------------------
+# attention + (ffn | moe) transformer block
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model),
+         "attn": L.attn_init(ks[0], cfg),
+         "ln2": L.rmsnorm_init(cfg.d_model)}
+    if cfg.n_experts:
+        p["moe"] = L.moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = L.ffn_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
+               shard: ShardCtx = NOSHARD, moe_capacity=None):
+    window = cfg.window if kind == ATTN_LOCAL else None
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos, mrope_pos3=mrope_pos3)
+    q = shard.constrain_heads(q, cfg.n_heads)
+    k = shard.constrain_heads(k, cfg.n_kv_heads)
+    o = L.mea_attention(q, k, v, causal=True, window=window, q_pos=pos)
+    o = o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = 0.0
+    if cfg.n_experts:
+        y, aux = L.moe(p["moe"], h, cfg, shard=shard, capacity=moe_capacity)
+    else:
+        h2 = shard.constrain(h, lambda P, c: P(c.dp, None, None))
+        y = L.ffn(p["ffn"], h2)
+    return x + y, aux
+
+
+def attn_block_decode(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
+                      shard: ShardCtx = NOSHARD):
+    """x: (B,1,d); cache: {'k','v'} (B,S,kv,hd); pos: (B,)."""
+    window = cfg.window if kind == ATTN_LOCAL else None
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos[:, None])
+    bidx = jnp.arange(x.shape[0])
+    # barrier: stops XLA from fusing the (f32 rope) -> bf16 convert into the
+    # cache scatter, which would materialize the WHOLE cache in f32
+    k_upd, v_upd = jax.lax.optimization_barrier((k[:, 0], v[:, 0]))
+    kc = cache["k"].at[bidx, pos].set(k_upd)
+    vc = cache["v"].at[bidx, pos].set(v_upd)
+    o = L.decode_attention(q, kc, vc, pos, window=window)
+    o = o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = L.moe(p["moe"], h, cfg, shard=shard,
+                     capacity=max(4, min(x.shape[0], 4 * cfg.top_k)))
+    else:
+        y = L.ffn(p["ffn"], h)
+    return x + y, {"k": kc, "v": vc}
+
+
+def attn_cache_init(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def rglru_block_init(key, cfg: ModelConfig):
+    d, dr = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": L.rmsnorm_init(d),
+        "wx": L.dense_init(ks[0], d, dr),
+        "wgate": L.dense_init(ks[1], d, dr),
+        "conv": L.conv1d_init(ks[2], dr, cfg.conv_width),
+        "wr": L.dense_init(ks[3], dr, dr),
+        "wi": L.dense_init(ks[4], dr, dr),
+        "br": jnp.zeros((dr,), jnp.float32),
+        "bi": jnp.zeros((dr,), jnp.float32),
+        # softplus(a_param) ~ 0.08 -> decay a in the stable range
+        "a_param": jnp.log(jnp.expm1(jnp.full((dr,), 0.08))),
+        "wo": L.dense_init(ks[5], dr, d, scale=1.0 / math.sqrt(dr)),
+        "ln2": L.rmsnorm_init(d),
+        "ffn": L.ffn_init(ks[6], d, cfg.d_ff),
+    }
+
+
+def rglru_block(p, x, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    branch = h @ p["wx"].astype(h.dtype)
+    gate = h @ p["wgate"].astype(h.dtype)
+    bx = L.causal_conv1d(p["conv"], branch)
+    r = (bx @ p["wr"].astype(bx.dtype)) + p["br"].astype(bx.dtype)
+    i = (bx @ p["wi"].astype(bx.dtype)) + p["bi"].astype(bx.dtype)
+    from repro.kernels import ref as KREF
+    hseq = KREF.rglru(bx.astype(jnp.float32), r.astype(jnp.float32),
+                      i.astype(jnp.float32), p["a_param"]).astype(x.dtype)
+    y = (hseq * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), 0.0
+
+
+def _rglru_out(p, dtype):
+    # out proj: reuse wgate^T shape (dr, d) — stored lazily as its own param
+    return p["wo"].astype(dtype)
+
+
+def rglru_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    branch = h @ p["wx"].astype(h.dtype)           # (B,1,dr)
+    gate = h @ p["wgate"].astype(h.dtype)
+    yt, conv_state = L.causal_conv1d_step(p["conv"], cache["conv"], branch[:, 0])
+    bx = yt[:, None]
+    r = (bx @ p["wr"].astype(bx.dtype)) + p["br"].astype(bx.dtype)
+    i = (bx @ p["wi"].astype(bx.dtype)) + p["bi"].astype(bx.dtype)
+    rg = jax.nn.sigmoid(r.astype(jnp.float32))
+    ig = jax.nn.sigmoid(i.astype(jnp.float32))
+    from repro.kernels.ref import RGLRU_C
+    log_a = -RGLRU_C * jax.nn.softplus(p["a_param"])[None, None] * rg
+    a_t = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    hnew = a_t[:, 0] * cache["h"] + mult[:, 0] * (
+        ig[:, 0] * bx[:, 0].astype(jnp.float32))
+    y = (hnew[:, None].astype(x.dtype) * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), {"conv": conv_state, "h": hnew}
+
+
+def rglru_cache_init(cfg: ModelConfig, b: int, dtype=jnp.bfloat16):
+    return {"conv": jnp.zeros((b, cfg.conv_width - 1, cfg.d_rnn), dtype),
+            "h": jnp.zeros((b, cfg.d_rnn), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba_block_init(key, cfg: ModelConfig):
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, hh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * g * n
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": L.rmsnorm_init(d),
+        "in_proj": L.dense_init(ks[0], d, 2 * din + 2 * g * n + hh),
+        "conv": L.conv1d_init(ks[1], conv_ch, cfg.conv_width),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, hh)),
+        "d_skip": jnp.ones((hh,), jnp.float32),
+        "gnorm": L.rmsnorm_init(din),
+        "out_proj": L.dense_init(ks[2], din, d),
+    }
+
+
+def _mamba_split(cfg, zxbcdt):
+    din, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD):
+    b, s, d = x.shape
+    din, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+    h0 = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = h0 @ p["in_proj"].astype(h0.dtype)
+    z, xbc, dt_raw = _mamba_split(cfg, zxbcdt)
+    xbc = jax.nn.silu(L.causal_conv1d(p["conv"], xbc))
+    xs, bc = jnp.split(xbc, [din], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])
+    from repro.kernels import ref as KREF
+    xh = xs.reshape(b, s, hh, ph).astype(jnp.float32)         # (B,S,H,P)
+    chunk = 64 if s % 64 == 0 else (16 if s % 16 == 0 else 1)
+    y = KREF.ssd_chunked(xh, dt, a,
+                         bmat.reshape(b, s, g, n).astype(jnp.float32),
+                         cmat.reshape(b, s, g, n).astype(jnp.float32),
+                         chunk=chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = L.rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype), 0.0
+
+
+def mamba_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
+    b = x.shape[0]
+    din, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+    h0 = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = (h0 @ p["in_proj"].astype(h0.dtype))[:, 0]
+    z, xbc, dt_raw = _mamba_split(cfg, zxbcdt)
+    yt, conv_state = L.causal_conv1d_step(p["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(yt)
+    xs, bc = jnp.split(xbc, [din], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                    # (B, g*n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["a_log"])                                  # (H,)
+    xh = xs.reshape(b, hh, ph).astype(jnp.float32)
+    rep = hh // g
+    bm = jnp.repeat(bmat.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+    cm = jnp.repeat(cmat.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt * a[None])                                # (B,H)
+    state = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", bm * dt[..., None], xh)
+    y = jnp.einsum("bhn,bhpn->bhp", cm, state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = L.rmsnorm(p["gnorm"], y * jax.nn.silu(z[:, None]), cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype), \
+        {"conv": conv_state, "ssm": state}
+
+
+def mamba_cache_init(cfg: ModelConfig, b: int, dtype=jnp.bfloat16):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {"conv": jnp.zeros((b, cfg.conv_width - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder blocks (seamless-m4t)
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ks[0], cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "ffn": L.ffn_init(ks[1], cfg.d_model, cfg.d_ff)}
+
+
+def enc_block(p, x, cfg: ModelConfig, *, pos, shard: ShardCtx = NOSHARD):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    o = L.mea_attention(q, k, v, causal=False, q_pos=pos)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h)
+
+
+def dec_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attn_init(ks[0], cfg),
+            "lnx": L.rmsnorm_init(cfg.d_model),
+            "xattn": L.attn_init(ks[1], cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "ffn": L.ffn_init(ks[2], cfg.d_model, cfg.d_ff)}
+
+
+def _cross_attention(p, x, enc_kv, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nq, hd)
+    k, v = enc_kv
+    return L.mea_attention(q, k, v, causal=False).reshape(b, s, -1) \
+        @ p["wo"].astype(x.dtype)
+
+
+def enc_kv(p, enc_out, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def dec_block(p, x, cfg: ModelConfig, *, pos, enc_out,
+              shard: ShardCtx = NOSHARD, enc_kv_pre=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    o = L.mea_attention(q, k, v, causal=True, q_pos=pos)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+    kv = enc_kv_pre if enc_kv_pre is not None \
+        else enc_kv(p["xattn"], enc_out, cfg)
+    x = x + _cross_attention(p["xattn"], h, kv, cfg)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), 0.0
+
+
+def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos[:, None])
+    bidx = jnp.arange(x.shape[0])
+    kc = cache["k"].at[bidx, pos].set(k[:, 0])
+    vc = cache["v"].at[bidx, pos].set(v[:, 0])
+    o = L.decode_attention(q, kc, vc, pos)
+    x = x + o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+    h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+    x = x + _cross_attention(p["xattn"], h,
+                             (cache["enc_k"], cache["enc_v"]), cfg)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), {"k": kc, "v": vc,
+                                    "enc_k": cache["enc_k"],
+                                    "enc_v": cache["enc_v"]}

@@ -1,0 +1,511 @@
+"""Model building blocks (pure functional JAX): norms, RoPE/M-RoPE, causal
+depthwise conv, memory-efficient GQA attention, SwiGLU FFN, MoE.
+
+All matmul-bearing blocks route through coarsenable kernels when
+``backend='pallas'`` (small shapes / TPU); the default XLA path ('ref') is
+used for CPU training, tests and the dry-run lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# sharding context: axis names used for with_sharding_constraint hooks
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    dp: Any = None            # data-parallel axis name(s), e.g. ('pod','data')
+    tp: Any = None            # tensor-parallel axis name, e.g. 'model'
+    sp: Any = None            # sequence axis for long-context cells
+    tp_size: int = 1
+    dp_size: int = 1
+    enabled: bool = False
+    mesh: Any = None          # jax Mesh (needed by shard_map code paths)
+    # optional (path, leaf) -> PartitionSpec used to re-constrain per-layer
+    # parameter slices INSIDE the period scan, keeping the FSDP all-gather
+    # in the loop body instead of hoisted over the whole stacked tensor
+    param_spec_fn: Any = None
+
+    def constrain_params(self, tree):
+        if not self.enabled or self.param_spec_fn is None:
+            return tree
+        import jax
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: lax.with_sharding_constraint(
+                l, self.param_spec_fn(p, l)), tree)
+
+    def constrain(self, x, spec_fn):
+        if not self.enabled:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return lax.with_sharding_constraint(x, spec_fn(P, self))
+
+    def constrain_heads(self, x, n_heads: int):
+        """Shard a (B,S,H,D) tensor's head axis on tp — only when it divides
+        evenly (a non-divisible constraint fights GSPMD's propagation and
+        triggers involuntary remat/replication)."""
+        if not self.enabled or n_heads % max(1, self.tp_size):
+            return x
+        from jax.sharding import PartitionSpec as P
+        return lax.with_sharding_constraint(x, P(self.dp, None, self.tp, None))
+
+
+NOSHARD = ShardCtx()
+
+
+def act(x, spec):
+    return x
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale)
+
+
+def rmsnorm_init(d):
+    return {"scale": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B,S,H,D); pos: (B,S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (B,S,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  pos3: (3,B,S) (temporal, height, width);
+    sections give the number of frequency *pairs* drawn from each component."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (D/2,)
+    # choose the position component per frequency-pair index
+    comp = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                                  # (D/2,)
+    pos_sel = pos3.transpose(1, 2, 0)[..., comp].astype(jnp.float32)  # (B,S,D/2)
+    ang = pos_sel * freqs[None, None, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv1d (mamba2 / griffin), with decode cache
+# --------------------------------------------------------------------------
+
+def conv1d_init(key, channels, width):
+    return {"w": jax.random.normal(key, (width, channels), jnp.float32)
+            / math.sqrt(width),
+            "b": jnp.zeros((channels,), jnp.float32)}
+
+
+def causal_conv1d(p, x):
+    """x: (B,S,C) -> (B,S,C); causal depthwise window sum."""
+    w = p["w"]
+    width = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i]
+    return (out + p["b"]).astype(x.dtype)
+
+
+def causal_conv1d_step(p, state, xt):
+    """state: (B,width-1,C) trailing inputs; xt: (B,C) -> (yt, new_state)."""
+    w, b = p["w"], p["b"]
+    width = w.shape[0]
+    buf = jnp.concatenate([state, xt[:, None, :]], axis=1)   # (B,width,C)
+    yt = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32), w) + b
+    return yt.astype(xt.dtype), buf[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# memory-efficient GQA attention (pure-jnp flash; the XLA model path)
+# --------------------------------------------------------------------------
+
+def mea_attention(q, k, v, *, causal=True, window=None, q_pos=None,
+                  k_len=None, q_chunk=512, kv_chunk=512, scale=None):
+    """Chunked (flash-style) attention in pure jnp.
+
+    q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D).  q_pos: (B,Sq) global row positions
+    (defaults to arange).  k_len: optional valid kv length (decode).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+
+    # keep K/V in their storage dtype (bf16): a full f32 upconversion of the
+    # cache doubles+ the live set; the MXU accumulates in f32 via
+    # preferred_element_type instead.
+    qg = (q.reshape(b, sq, hkv, g, d) * jnp.asarray(scale, q.dtype))
+    kf, vf = k, v
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = (sq + q_chunk - 1) // q_chunk
+    nk = (sk + kv_chunk - 1) // kv_chunk
+    # pad to multiples
+    def padto(x, n, axis):
+        pad = n - x.shape[axis]
+        if pad == 0:
+            return x
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        return jnp.pad(x, cfg)
+
+    qg = padto(qg, nq * q_chunk, 1)
+    qp = padto(q_pos, nq * q_chunk, 1)
+    kf = padto(kf, nk * kv_chunk, 1)
+    vf = padto(vf, nk * kv_chunk, 1)
+
+    kpos = jnp.arange(nk * kv_chunk, dtype=jnp.int32)
+    valid_k = kpos < (sk if k_len is None else k_len)    # () or (B,)? k_len scalar
+    if k_len is not None and jnp.ndim(k_len) > 0:
+        valid_k = kpos[None, :] < k_len[:, None]          # (B, Sk)
+    else:
+        valid_k = jnp.broadcast_to(valid_k[None], (b, nk * kv_chunk))
+
+    qg = qg.reshape(b, nq, q_chunk, hkv, g, d)
+    qp = qp.reshape(b, nq, q_chunk)
+    kc = kf.reshape(b, nk, kv_chunk, hkv, d)
+    vc = vf.reshape(b, nk, kv_chunk, hkv, d)
+    kpc = kpos.reshape(nk, kv_chunk)
+    vkc = valid_k.reshape(b, nk, kv_chunk)
+
+    def q_step(_, qi):
+        qblk, qpos_blk = qi                               # (B,qc,hkv,g,d),(B,qc)
+
+        # checkpointed: without this the backward saves every (q,kv) chunk's
+        # probability block — i.e. the full S^2 attention matrix.  With it
+        # only the per-chunk (m,l,acc) carry survives and s/p are recomputed
+        # in the backward, flash-attention style.
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp, vk = ki
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            mask = vk[:, None, :]                         # (B,1,Sk)
+            if causal:
+                mask = mask & (kp[None, None, :] <= qpos_blk[:, :, None])
+            if window is not None:
+                mask = mask & (kp[None, None, :] > qpos_blk[:, :, None] - window)
+            mask = mask[:, :, None, None, :]              # (B,q,1,1,k)
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, q_chunk, hkv, g), -1e30),
+                jnp.zeros((b, q_chunk, hkv, g)),
+                jnp.zeros((b, q_chunk, hkv, g, d)))
+        (m, l, acc), _ = lax.scan(
+            kv_step, init,
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kpc, vkc.transpose(1, 0, 2)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, acc / l[..., None]
+
+    _, out = lax.scan(jax.checkpoint(q_step), None,
+                      (qg.transpose(1, 0, 2, 3, 4, 5), qp.transpose(1, 0, 2)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
+    """Single-token attention against a cache.  q: (B,1,H,D);
+    caches: (B,S,Hkv,D); pos: (B,) current position (0-based)."""
+    b, _, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    # never upconvert the cache (it is the dominant buffer at decode);
+    # accumulate in f32 via preferred_element_type instead
+    qg = (q.reshape(b, hkv, g, d) * jnp.asarray(scale, q.dtype)
+          ).astype(k_cache.dtype)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    mask = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        mask = mask & (kpos[None, :] > pos[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention block params
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd),
+        "wk": dense_init(ks[1], d, nkv * hd),
+        "wv": dense_init(ks[2], d, nkv * hd),
+        "wo": dense_init(ks[3], nq * hd, d, scale=1.0 / math.sqrt(nq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd)
+        p["knorm"] = rmsnorm_init(hd)
+    return p
+
+
+def qkv_project(p, x, cfg: ModelConfig, pos, *, mrope_pos3=None):
+    """x: (B,S,d) -> q (B,S,H,hd), k,v (B,S,Hkv,hd) with rope applied."""
+    b, s, _ = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        pos3 = mrope_pos3
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+def ffn_init(key, d, d_ff):
+    ks = jax.random.split(key, 3)
+    return {"w1": dense_init(ks[0], d, d_ff),
+            "w3": dense_init(ks[1], d, d_ff),
+            "w2": dense_init(ks[2], d_ff, d, scale=1.0 / math.sqrt(d_ff))}
+
+
+def ffn(p, x):
+    h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MoE (top-k, optional shared experts) — capacity-based EP-shardable dispatch
+# --------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    d, e, ff = cfg.d_model, cfg.n_experts_padded, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e),
+        "w1": jax.random.normal(ks[1], (e, d, ff)) / math.sqrt(d),
+        "w3": jax.random.normal(ks[2], (e, d, ff)) / math.sqrt(d),
+        "w2": jax.random.normal(ks[3], (e, ff, d)) / math.sqrt(ff),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * ff
+        ks2 = jax.random.split(ks[4], 4)
+        p["shared"] = ffn_init(ks2[0], d, sf)
+        p["shared_gate"] = dense_init(ks2[1], d, 1)
+    return p
+
+
+def moe(p, x, cfg: ModelConfig, *, capacity: int | None = None,
+        renorm: bool = True, shard: ShardCtx = NOSHARD):
+    """x: (B,S,d) -> (B,S,d), aux load-balance loss.
+
+    Dispatch: per-expert top-capacity gather (EP-shardable on the expert
+    axis; no (T,E,C) one-hot).  Overflow tokens are dropped (capacity
+    factor 1.5 by default), standard for large-scale EP.
+
+    When a mesh is attached (shard.mesh) the computation runs under
+    shard_map: each (data, model) shard routes its LOCAL tokens to its LOCAL
+    experts and the contributions are psum'd over the expert ('model') axis —
+    gathers and the combine-scatter stay device-local, which is what keeps
+    the dispatch buffers from being replicated by GSPMD.
+    """
+    if shard.enabled and shard.mesh is not None and shard.tp_size > 1:
+        return _moe_shardmap(p, x, cfg, capacity=capacity, renorm=renorm,
+                             shard=shard)
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    e_pad = cfg.n_experts_padded
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    if e_pad != e:
+        logits = jnp.where(jnp.arange(e_pad) < e, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, k)                          # (T,k)
+    if renorm:
+        w = w / (w.sum(-1, keepdims=True) + 1e-9)
+
+    # aux loss (Switch): e * sum_e f_e * P_e  (pad experts contribute ~0)
+    onehot = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32)   # (T,k,E_pad)
+    f = onehot.sum(axis=(0, 1)) / t                          # fraction routed
+    pmean = probs.mean(axis=0)
+    aux = e * jnp.sum(f * pmean)
+
+    cap = capacity if capacity is not None else max(8, int(1.5 * k * t / e))
+    cap = min(cap, t)
+    # per-expert token weights (E_pad, T) — shardable on E (model axis)
+    tokw = jnp.einsum("tke,tk->et", onehot, w)
+    tokw = shard.constrain(tokw, lambda P, c: P(c.tp, None))
+    topw, topi = lax.top_k(tokw, cap)                     # (E_pad,C)
+    live = topw > 0.0
+    xe = jnp.take(xt, topi.reshape(-1), axis=0).reshape(e_pad, cap, d)
+    xe = xe * live[..., None]
+    xe = shard.constrain(xe, lambda P, c: P(c.tp, None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(xe.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xe.dtype))
+    ye = ye * (topw * live)[..., None].astype(ye.dtype)
+    y = jnp.zeros((t, d), dtype=jnp.float32).at[topi.reshape(-1)].add(
+        ye.reshape(-1, d).astype(jnp.float32))
+    y = y.astype(x.dtype)
+    y = shard.constrain(y, lambda P, c: P(c.dp, None))
+
+    if cfg.n_shared_experts:
+        gate = jax.nn.sigmoid((xt @ p["shared_gate"].astype(xt.dtype))
+                              .astype(jnp.float32)).astype(x.dtype)
+        y = y + ffn(p["shared"], xt) * gate
+    return y.reshape(b, s, d), aux
+
+
+def _moe_shardmap(p, x, cfg: ModelConfig, *, capacity, renorm,
+                  shard: ShardCtx):
+    """Expert-parallel MoE via shard_map (see `moe` docstring)."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    e_pad = cfg.n_experts_padded
+    tp, tp_axis, dp = shard.tp_size, shard.tp, shard.dp
+    if e_pad % tp:
+        raise ValueError(f"padded experts {e_pad} not divisible by tp={tp}")
+    e_l = e_pad // tp
+
+    xt = x.reshape(t, d)
+    w1, w3, w2 = p["w1"], p["w3"], p["w2"]   # already padded to e_pad
+    router = p["router"]
+
+    def body(xt_l, router_, w1_l, w3_l, w2_l):
+        t_l = xt_l.shape[0]
+        logits = (xt_l @ router_.astype(xt_l.dtype)).astype(jnp.float32)
+        if e_pad != e:
+            logits = jnp.where(jnp.arange(e_pad) < e, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = lax.top_k(probs, k)
+        if renorm:
+            w = w / (w.sum(-1, keepdims=True) + 1e-9)
+        onehot = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32)
+        f = onehot.sum(axis=(0, 1)) / t_l
+        aux = e * jnp.sum(f * probs.mean(axis=0))
+        for ax in (dp if isinstance(dp, tuple) else (dp,)):
+            aux = lax.pmean(aux, ax)
+
+        cap = capacity if capacity is not None \
+            else max(8, int(1.5 * k * t_l / e))
+        cap = min(cap, t_l)
+        j = lax.axis_index(tp_axis)
+        ids_local = j * e_l + jnp.arange(e_l)              # global expert ids
+        sel = idx[None] == ids_local[:, None, None]        # (E_l, T_l, k)
+        tokw = jnp.einsum("etk,tk->et", sel.astype(jnp.float32), w)
+        topw, topi = lax.top_k(tokw, cap)                  # (E_l, C)
+        live = (topw > 0.0)
+        xe = jnp.take(xt_l, topi.reshape(-1), axis=0).reshape(e_l, cap, d)
+        xe = xe * live[..., None]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1_l.astype(xe.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", xe, w3_l.astype(xe.dtype))
+        ye = jnp.einsum("ecf,efd->ecd", h, w2_l.astype(xe.dtype))
+        ye = ye * (topw * live)[..., None].astype(ye.dtype)
+        y_l = jnp.zeros((t_l, d), jnp.float32).at[topi.reshape(-1)].add(
+            ye.reshape(-1, d).astype(jnp.float32))
+        # combine experts across the EP axis; bf16 halves the wire (§Perf)
+        y_l = lax.psum(y_l.astype(jnp.dtype(cfg.moe_combine_dtype)), tp_axis)
+        return y_l.astype(xt_l.dtype), aux
+
+    y, aux = shard_map(
+        body, mesh=shard.mesh,
+        in_specs=(P(dp, None), P(), P(tp_axis, None, None),
+                  P(tp_axis, None, None), P(tp_axis, None, None)),
+        out_specs=(P(dp, None), P()),
+        check_rep=False,
+    )(xt, router, w1, w3, w2)
+
+    if cfg.n_shared_experts:
+        gate = jax.nn.sigmoid((xt @ p["shared_gate"].astype(xt.dtype))
+                              .astype(jnp.float32)).astype(x.dtype)
+        y = y + ffn(p["shared"], xt) * gate
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW, clipping, schedules, microbatch accumulation,
+gradient compression + bucket coarsening."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import wsd_schedule
+from .accumulate import accumulate_grads
+from .compression import (
+    int8_compress_grads, bucket_coarsen, BucketPlan, plan_buckets)

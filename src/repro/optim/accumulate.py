@@ -1,0 +1,43 @@
+"""Microbatch gradient accumulation via lax.scan.
+
+Under GSPMD the per-microbatch reduce-scatter of gradients overlaps with the
+next microbatch's compute (XLA schedules the collective async); accumulation
+also shrinks the live activation set — the standard large-scale recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """loss_fn(params, microbatch) -> (loss, metrics).
+
+    batch leaves have leading dim B = n_micro * b_micro; returns mean loss,
+    summed-then-averaged grads, metrics of the last microbatch.
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, grads, metrics
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+        return (loss_acc + loss, grads_acc), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads_sum), metrics = lax.scan(body, (0.0, zeros), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: g * inv, grads_sum)
+    last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum * inv, grads, last_metrics

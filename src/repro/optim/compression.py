@@ -1,0 +1,98 @@
+"""Gradient compression + bucket coarsening for the DP all-reduce.
+
+Bucket coarsening is the paper's core insight applied to collectives: many
+narrow transactions (one all-reduce per parameter tensor) are strictly worse
+than few wide ones (one all-reduce per ~64MB bucket), exactly as one 512-bit
+burst-coalesced LSU beats eight 32-bit LSUs.  `plan_buckets`/`bucket_coarsen`
+flatten the gradient pytree into contiguous buckets; under GSPMD this turns
+per-tensor collectives into per-bucket collectives.
+
+int8 error-feedback compression: quantize grads to int8 per-bucket scale,
+carry the quantization residual to the next step (EF-SGD), cutting DP wire
+bytes 4x at negligible quality cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    sizes: tuple            # flat element count per bucket
+    treedef: Any
+    shapes: tuple
+    bucket_of: tuple        # leaf index -> bucket id
+    offsets: tuple          # leaf index -> offset within bucket
+
+
+def plan_buckets(params, bucket_bytes: int = 64 * 2 ** 20) -> BucketPlan:
+    leaves, treedef = jax.tree.flatten(params)
+    shapes = tuple(l.shape for l in leaves)
+    bucket_of, offsets, sizes = [], [], []
+    cur, cur_elems = 0, 0
+    limit = bucket_bytes // 4
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        if cur_elems and cur_elems + n > limit:
+            sizes.append(cur_elems)
+            cur += 1
+            cur_elems = 0
+        bucket_of.append(cur)
+        offsets.append(cur_elems)
+        cur_elems += n
+    sizes.append(cur_elems)
+    return BucketPlan(tuple(sizes), treedef, shapes,
+                      tuple(bucket_of), tuple(offsets))
+
+
+def bucket_coarsen(grads, plan: BucketPlan):
+    """pytree -> list of flat buckets (the coalesced collective unit)."""
+    leaves = jax.tree.leaves(grads)
+    buckets = [[] for _ in plan.sizes]
+    for i, l in enumerate(leaves):
+        buckets[plan.bucket_of[i]].append(l.reshape(-1).astype(jnp.float32))
+    return [jnp.concatenate(b) if len(b) > 1 else b[0] for b in buckets]
+
+
+def bucket_restore(buckets, plan: BucketPlan):
+    leaves = []
+    for i, shape in enumerate(plan.shapes):
+        n = int(np.prod(shape)) if shape else 1
+        off = plan.offsets[i]
+        leaves.append(buckets[plan.bucket_of[i]][off:off + n].reshape(shape))
+    return jax.tree.unflatten(plan.treedef, leaves)
+
+
+def int8_compress_grads(grads, residual):
+    """Error-feedback int8 compression (per-leaf scale).
+
+    Returns (qtree int8, scales f32, new_residual).  The int8 payload is what
+    crosses the DP axis (4x fewer wire bytes); the quantization error is
+    carried to the next step (EF-SGD), so the compression is unbiased over
+    time.
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                grads)
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = jax.tree.leaves(residual)
+    qs, scales, resids = [], [], []
+    for g, r in zip(leaves_g, leaves_r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        qs.append(q)
+        scales.append(scale)
+        resids.append(g - q.astype(jnp.float32) * scale)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, resids))
+
+
+def int8_decompress(qtree, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qtree, scales)

@@ -1,0 +1,13 @@
+"""Warmup-Stable-Decay learning-rate schedule (scalar jnp, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, warmup: int = 100, stable: int = 10_000,
+                 decay: int = 1_000, floor: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, warmup))
+    past = jnp.maximum(0.0, s - (warmup + stable))
+    dec = 1.0 - (1.0 - floor) * jnp.minimum(1.0, past / max(1, decay))
+    return warm * dec

@@ -1,0 +1,5 @@
+"""Runtime substrate: watchdog, preemption, retry, elastic re-mesh."""
+from .watchdog import StepWatchdog
+from .preemption import PreemptionHandler
+from .retry import retry_step, SimulatedFailure
+from .elastic import elastic_restore_plan

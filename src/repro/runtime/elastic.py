@@ -1,0 +1,43 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+Checkpoints store *logical* arrays (checkpoint/manager.py), so elasticity is
+a pure planning problem: given the new mesh, recompute shardings + the data
+pipeline row-slicing, and validate divisibility (batch vs. the new dp
+degree).  `elastic_restore_plan` returns everything the launcher needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    mesh: Mesh
+    dp_degree: int
+    tp_degree: int
+    batch_per_replica: int
+    param_shardings: Any
+    notes: list
+
+
+def elastic_restore_plan(mesh: Mesh, global_batch: int,
+                         param_specs: Any) -> ElasticPlan:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = axes.get("data", 1) * axes.get("pod", 1)
+    tp = axes.get("model", 1)
+    notes = []
+    if global_batch % dp:
+        # shrink to the nearest divisor — elastic restart keeps the GLOBAL
+        # batch fixed by increasing per-replica rows instead when possible
+        notes.append(f"global_batch {global_batch} not divisible by dp={dp}; "
+                     f"launcher must regrid (e.g. grad-accumulate)")
+    shardings = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                             param_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return ElasticPlan(mesh=mesh, dp_degree=dp, tp_degree=tp,
+                       batch_per_replica=max(1, global_batch // dp),
+                       param_shardings=shardings, notes=notes)

@@ -1,0 +1,163 @@
+"""Hypothesis property tests for the coarsening framework's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (CoarseningConfig, plan_stream, KIND_CONSECUTIVE,
+                        KIND_GAPPED, KIND_NONE)
+from repro.core import analysis
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+kinds = st.sampled_from([KIND_NONE, KIND_CONSECUTIVE, KIND_GAPPED])
+degrees = st.sampled_from([1, 2, 4, 8])
+
+
+# --- THE system invariant: results independent of coarsening config --------
+
+@given(kind=kinds, degree=degrees, seed=st.integers(0, 10),
+       ai=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_coarsening_never_changes_results(kind, degree, seed, ai):
+    cfg = CoarseningConfig(kind, degree)
+    n = 4096
+    inputs = tuple(
+        jax.random.normal(jax.random.PRNGKey(seed * 31 + i), (n,))
+        for i in range(4))
+    expected = ref.ew_stream(list(inputs), ai=ai)
+    got = ops.ew_stream(inputs, cfg, ai=ai, block=128)
+    np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-5)
+
+
+@given(kind=kinds, degree=st.sampled_from([1, 2, 4]), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_matmul_coarsening_invariance(kind, degree, seed):
+    cfg = CoarseningConfig(kind, degree)
+    a = jax.random.normal(jax.random.PRNGKey(seed), (256, 128))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 99), (128, 128))
+    got = ops.matmul(a, b, cfg, bm=32, bn=128, bk=128)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+# --- plan invariants ---------------------------------------------------------
+
+@given(kind=kinds, degree=degrees,
+       logn=st.integers(13, 18), logb=st.integers(7, 10))
+@settings(**SETTINGS)
+def test_stream_plan_partitions_work(kind, degree, logn, logb):
+    n, block = 2 ** logn, 2 ** logb
+    cfg = CoarseningConfig(kind, degree)
+    plan = plan_stream(n, cfg, block=block)
+    # every element covered exactly once
+    assert plan.grid * cfg.degree * plan.block == n
+    # LSU-count analog: consecutive = 1 wide DMA, gapped = degree narrow ones
+    if cfg.kind == KIND_GAPPED:
+        assert plan.dmas_per_operand == cfg.degree
+        assert plan.dma_elems == plan.block
+    else:
+        assert plan.dmas_per_operand == 1
+        assert plan.dma_elems == cfg.degree * plan.block
+    # view shape is a permutation-free reshape of n
+    assert int(np.prod(plan.view_shape)) == n
+
+
+@given(degree=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_consecutive_coalesces_better_than_gapped(degree):
+    """Paper F1 as a property: for regular streams the modeled DMA time of
+    consecutive coarsening is <= gapped at the same degree."""
+    n = 2 ** 16
+    con = analysis.stream_cost(
+        plan_stream(n, CoarseningConfig(KIND_CONSECUTIVE, degree)),
+        n_loads=8, arith_per_elem=6.0)
+    gap = analysis.stream_cost(
+        plan_stream(n, CoarseningConfig(KIND_GAPPED, degree)),
+        n_loads=8, arith_per_elem=6.0)
+    assert con.dma_s_per_step <= gap.dma_s_per_step
+    assert con.dmas_per_step < gap.dmas_per_step
+
+
+@given(kind=kinds, degree=degrees, repl=st.sampled_from([1, 2, 4]),
+       vw=st.sampled_from([1, 2]))
+@settings(**SETTINGS)
+def test_parse_label_roundtrip(kind, degree, repl, vw):
+    cfg = CoarseningConfig(kind, degree, repl, vw)
+    again = CoarseningConfig.parse(cfg.label)
+    assert again == cfg
+
+
+def test_parse_spec_forms():
+    assert CoarseningConfig.parse("consecutive:4").degree == 4
+    assert CoarseningConfig.parse("gapped:8").kind == KIND_GAPPED
+    assert CoarseningConfig.parse("con4+pipe2+simd2") == CoarseningConfig(
+        KIND_CONSECUTIVE, 4, 2, 2)
+    assert CoarseningConfig.parse("none") == CoarseningConfig()
+    with pytest.raises((KeyError, ValueError)):
+        CoarseningConfig.parse("bogus3")
+
+
+def test_degree1_normalizes_to_none():
+    assert CoarseningConfig(KIND_CONSECUTIVE, 1).kind == KIND_NONE
+
+
+# --- cost model directional properties (the paper's findings) ---------------
+
+def _mb_cost(spec, **kw):
+    cfg = CoarseningConfig.parse(spec)
+    plan = plan_stream(2 ** 22, cfg, block=1024)
+    base = dict(n_loads=8, arith_per_elem=6.0)
+    base.update(kw)
+    return analysis.stream_cost(plan, **base)
+
+
+def test_f1_consecutive_wins_on_regular():
+    base = _mb_cost("none")
+    con8 = _mb_cost("con8")
+    gap8 = _mb_cost("gap8")
+    assert con8.modeled_s < base.modeled_s          # coarsening helps
+    assert con8.modeled_s <= gap8.modeled_s         # consecutive >= gapped
+
+
+def test_f3_low_ai_benefits_more():
+    s1 = _mb_cost("none", arith_per_elem=1.0).modeled_s / \
+        _mb_cost("con8", arith_per_elem=1.0).modeled_s
+    s10 = _mb_cost("none", arith_per_elem=10.0).modeled_s / \
+        _mb_cost("con8", arith_per_elem=10.0).modeled_s
+    assert s1 >= s10                                 # paper Fig. 11 trend
+
+
+def test_f4_divergence_hurts():
+    clean = _mb_cost("con8")
+    div = _mb_cost("con8", divergence_paths=4)
+    uniform = _mb_cost("con8", divergence_paths=4, divergence_uniform=True)
+    assert div.modeled_s > clean.modeled_s
+    assert uniform.modeled_s < div.modeled_s         # id-divergence recoverable
+
+
+def test_f5_resource_cost_ordering():
+    """Coarsening control resources < replication at equal degree: R x fewer
+    DMA queues/semaphores (the ALUT analog); VMEM totals are equal (the
+    paper's RAM-block saving does not transfer — DESIGN.md §2)."""
+    con = _mb_cost("con4")
+    pipe = _mb_cost("pipe4")
+    assert con.dma_sems * 4 == pipe.dma_sems
+    assert con.vmem_bytes == pipe.vmem_bytes
+
+
+def test_f2_gapped_wins_on_irregular():
+    """Irregular access: gapped (cached narrow LSUs w/ miss overlap) beats
+    consecutive, paper Fig. 10 bottom."""
+    n = 2 ** 20
+    kw = dict(n_loads=8, arith_per_elem=6.0, hit_rate=0.85, window_elems=8192)
+    con = analysis.gather_cost(
+        plan_stream(n, CoarseningConfig.parse("con8")), **kw)
+    gap = analysis.gather_cost(
+        plan_stream(n, CoarseningConfig.parse("gap8")), **kw)
+    assert gap.modeled_s <= con.modeled_s

@@ -1,0 +1,301 @@
+"""Distribution tests.  Multi-device cases run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test session
+keeps seeing exactly 1 device (per the assignment)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import (param_specs, param_shardings,
+                                        batch_specs, cache_specs)
+from repro.launch.steps import StepConfig, build_train_step, abstract_params
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (single device; pure spec logic)
+# ---------------------------------------------------------------------------
+
+def test_param_specs_cover_all_archs():
+    from jax.sharding import PartitionSpec as P
+    for arch in ("qwen3-0.6b", "olmoe-1b-7b", "mamba2-370m",
+                 "recurrentgemma-2b", "seamless-m4t-large-v2"):
+        cfg = get_config(arch)
+        abstract = abstract_params(cfg)
+        specs = param_specs(abstract)
+        leaves_a = jax.tree.leaves(abstract)
+        leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves_a) == len(leaves_s)
+        for a, s in zip(leaves_a, leaves_s):
+            assert len(s) <= a.ndim
+
+
+def test_param_specs_drop_indivisible_dims():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import _leaf_rule
+
+    class Key:
+        def __init__(self, k):
+            self.key = k
+
+    class Leaf:
+        ndim = 2
+        shape = (60, 1024)                      # 60 % 16 != 0
+
+    rule = _leaf_rule((Key("embed"),), Leaf, {"data": 16, "model": 16})
+    assert rule[0] is None                      # indivisible dim dropped
+    assert rule[1] == "data"                    # divisible dim kept
+
+    # padded vocab shards cleanly for every arch (vocab_padded % 256 == 0)
+    cfg = get_config("seamless-m4t-large-v2")   # raw vocab 256206 % 16 != 0
+    assert cfg.vocab_padded % 16 == 0
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+    specs = param_specs(abstract_params(cfg), FakeMesh)
+    assert specs["embed"] == P("model", "data")  # shardable after padding
+
+
+def test_2d_fsdp_tp_rules():
+    from jax.sharding import PartitionSpec as P
+    cfg = get_config("qwen3-0.6b")
+    specs = param_specs(abstract_params(cfg))
+    blk = specs["blocks"][0]
+    assert blk["attn"]["wq"] == P(None, "data", "model")   # stacked + 2D
+    assert blk["attn"]["wo"] == P(None, "model", "data")
+    assert blk["ffn"]["w2"] == P(None, "model", "data")
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_moe_expert_parallel_rules():
+    from jax.sharding import PartitionSpec as P
+    cfg = get_config("olmoe-1b-7b")
+    specs = param_specs(abstract_params(cfg))
+    blk = specs["blocks"][0]
+    assert blk["moe"]["w1"] == P(None, "model", "data", None)  # EP on model
+
+
+# ---------------------------------------------------------------------------
+# multi-device correctness (subprocess, 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_train_step_matches_single_device():
+    """Loss + grads identical (up to fp tolerance) on mesh (4,2) vs (1,1)."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch.steps import StepConfig, build_train_step
+        from repro.launch.mesh import make_production_mesh
+        from repro.models import model as M
+        from repro.optim import adamw_init
+
+        cfg = get_config("qwen3-0.6b").reduced()
+        losses = {}
+        for shape in [(1, 1), (4, 2)]:
+            mesh = jax.make_mesh(shape, ("data", "model"))
+            sc = StepConfig(seq=32, batch=8, kind="train", n_micro=2,
+                            remat="full")
+            fn, _, in_sh, out_sh = build_train_step(cfg, mesh, sc)
+            with mesh:
+                params = jax.jit(lambda k: M.lm_init(k, cfg),
+                                 out_shardings=in_sh[0])(jax.random.PRNGKey(0))
+                opt = jax.jit(adamw_init, out_shardings=in_sh[1])(params)
+                tok = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                         cfg.vocab)
+                batch = {"tokens": tok, "labels": tok}
+                batch = jax.tree.map(jax.device_put, batch, in_sh[2])
+                p2, o2, loss, gn = jax.jit(
+                    fn, in_shardings=in_sh, out_shardings=out_sh)(
+                    params, opt, batch)
+                losses[shape] = (float(loss), float(gn))
+        a, b = losses[(1, 1)], losses[(4, 2)]
+        assert abs(a[0] - b[0]) < 2e-2, (a, b)
+        assert abs(a[1] - b[1]) / max(a[1], 1e-6) < 5e-2, (a, b)
+        print("OK", losses)
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline import pipeline_apply
+
+        S = 4
+        mesh = jax.make_mesh((S,), ("stage",))
+        d = 16
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (S, d, d)) * 0.3
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jax.random.normal(jax.random.fold_in(key, 1), (8, d))
+        want = x
+        for i in range(S):
+            want = stage_fn(ws[i], want)
+        got = pipeline_apply(stage_fn, ws, x, mesh=mesh, n_micro=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        print("pipeline OK")
+    """, devices=4)
+
+
+def test_pipeline_parallel_gradients():
+    """Gradients must flow through the ppermute pipeline (training-capable
+    PP, not just inference)."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline import pipeline_apply
+
+        S, d = 4, 8
+        mesh = jax.make_mesh((S,), ("stage",))
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (S, d, d)) * 0.3
+        x = jax.random.normal(jax.random.fold_in(key, 1), (8, d))
+
+        def stage_fn(w, xx):
+            return jnp.tanh(xx @ w)
+
+        def loss_pipe(ws):
+            y = pipeline_apply(stage_fn, ws, x, mesh=mesh, n_micro=4)
+            return jnp.sum(y ** 2)
+
+        def loss_seq(ws):
+            y = x
+            for i in range(S):
+                y = stage_fn(ws[i], y)
+            return jnp.sum(y ** 2)
+
+        g1 = jax.grad(loss_pipe)(ws)
+        g2 = jax.grad(loss_seq)(ws)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-5)
+        print("pipeline grad OK")
+    """, devices=4)
+
+
+def test_bucketed_psum_matches_pertensor():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import bucketed_psum, pertensor_psum
+
+        mesh = jax.make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(0)
+        grads = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                            (33, 7)) for i in range(11)}
+        a = bucketed_psum(grads, mesh=mesh, bucket_bytes=4096)
+        b = pertensor_psum(grads, mesh=mesh)
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-6), a, b)
+        print("bucketed == pertensor OK")
+    """)
+
+
+def test_moe_shardmap_matches_reference():
+    """The shard_map EP dispatch must equal the single-device dispatch when
+    capacity admits every token (no drops)."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models import layers as L
+        from repro.models.layers import NOSHARD
+        from repro.distributed.sharding import make_shard_ctx
+
+        cfg = get_config("olmoe-1b-7b").reduced()
+        key = jax.random.PRNGKey(0)
+        p = L.moe_init(key, cfg)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+
+        y_ref, aux_ref = L.moe(p, x, cfg, capacity=32, shard=NOSHARD)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        shard = make_shard_ctx(mesh)
+        with mesh:
+            y_sm, aux_sm = jax.jit(
+                lambda p, x: L.moe(p, x, cfg, capacity=32, shard=shard)
+            )(p, x)
+        np.testing.assert_allclose(np.asarray(y_sm, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        # aux is estimated per dp shard then averaged (standard at scale):
+        # close to, not identical to, the global statistic
+        np.testing.assert_allclose(float(aux_sm), float(aux_ref), rtol=0.3)
+
+        # bf16 EP combine (§Perf C8) stays close to the f32 combine
+        import dataclasses
+        cfg16 = dataclasses.replace(cfg, moe_combine_dtype="bfloat16")
+        with mesh:
+            y16, _ = jax.jit(
+                lambda p, x: L.moe(p, x, cfg16, capacity=32, shard=shard)
+            )(p, x)
+        np.testing.assert_allclose(np.asarray(y16, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+        # gradients flow through the shard_map dispatch
+        g = jax.jit(jax.grad(lambda p, x: L.moe(p, x, cfg, capacity=32,
+                                                shard=shard)[0].sum()))(p, x)
+        gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0
+        print("moe shard_map OK", float(aux_sm))
+    """)
+
+
+def test_int8_ef_psum_close_to_exact():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import int8_ef_psum, pertensor_psum
+
+        mesh = jax.make_mesh((8,), ("data",))
+        key = jax.random.PRNGKey(0)
+        grads = {"w": jax.random.normal(key, (64, 32)),
+                 "b": jax.random.normal(jax.random.fold_in(key, 1), (17,))}
+        exact = pertensor_psum(grads, mesh=mesh)
+        approx, resid = int8_ef_psum(grads, None, mesh=mesh)
+        for k in grads:
+            a, e = np.asarray(approx[k]), np.asarray(exact[k])
+            rel = np.abs(a - e).max() / (np.abs(e).max() + 1e-9)
+            assert rel < 0.05, (k, rel)          # int8 quantization error
+        # residual carries the error (EF): |resid| <= scale/2
+        print("int8 psum OK")
+    """)
+
+
+def test_elastic_restart_across_meshes():
+    """Train 2 steps on mesh (2,2), checkpoint, resume on (8,1): loss
+    continues from the same state (elastic re-mesh)."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile, os
+        from repro.configs import get_config
+        from repro.launch.train import train
+
+        cfg = get_config("qwen3-0.6b").reduced()
+        d = tempfile.mkdtemp()
+        m1 = jax.make_mesh((2, 2), ("data", "model"))
+        l1, _ = train(cfg, steps=3, batch=8, seq=32, ckpt_dir=d,
+                      save_every=100, mesh=m1, log_every=100)
+        m2 = jax.make_mesh((8, 1), ("data", "model"))
+        l2, _ = train(cfg, steps=5, batch=8, seq=32, ckpt_dir=d,
+                      save_every=100, mesh=m2, log_every=100)
+        assert len(l2) == 2, (len(l1), len(l2))   # resumed at step 3
+        assert l2[0] < l1[0] + 0.5                # continued, not restarted
+        print("elastic OK", l1, l2)
+    """)

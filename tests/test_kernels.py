@@ -1,0 +1,262 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True).
+
+The invariant under test is the paper's: coarsening (any kind x degree),
+replication and vectorization redistribute work but never change results.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoarseningConfig
+from repro.kernels import ops, ref
+from repro.kernels import ew_stream as ew
+from repro.kernels import gather_stream as gs
+
+KEY = jax.random.PRNGKey(0)
+CFGS = ["none", "con2", "con4", "con8", "gap2", "gap4", "gap8", "con2+simd2"]
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# ---------------------------------------------------------------------------
+# ew_stream: variants x coarsening configs x shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ew.VARIANTS)
+@pytest.mark.parametrize("spec", ["none", "con4", "gap4", "con8", "gap2+simd2"])
+def test_ew_stream_variants(variant, spec):
+    n, n_loads = 8192, 8
+    inputs = [jax.random.normal(k(i), (n,), jnp.float32)
+              for i in range(n_loads)]
+    expected = ref.ew_stream(inputs, ai=6, variant=variant)
+    got = ops.ew_stream(tuple(inputs), CoarseningConfig.parse(spec),
+                        ai=6, variant=variant, block=512)
+    np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", ["pipe2", "pipe4", "con4+pipe2",
+                                  "gap2+pipe4"])
+def test_ew_stream_pipeline_replication(spec):
+    """Replication (num_compute_units analog) must not change results, even
+    combined with coarsening; gids must be replication-aware."""
+    n = 8192
+    inputs = [jax.random.normal(k(i + 900), (n,)) for i in range(4)]
+    for variant in ("base", "if_id"):
+        expected = ref.ew_stream(inputs, ai=6, variant=variant)
+        got = ops.ew_stream(tuple(inputs), CoarseningConfig.parse(spec),
+                            ai=6, variant=variant, block=512)
+        np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block", [(2048, 128), (16384, 1024)])
+@pytest.mark.parametrize("ai", [1, 6, 10])
+def test_ew_stream_shapes_ai(n, block, ai):
+    inputs = [jax.random.normal(k(i + 50), (n,)) for i in range(4)]
+    expected = ref.ew_stream(inputs, ai=ai)
+    for spec in ["con4", "gap4"]:
+        got = ops.ew_stream(tuple(inputs), CoarseningConfig.parse(spec),
+                            ai=ai, block=block)
+        np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather_stream (irregular)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", CFGS)
+@pytest.mark.parametrize("window", [64, 2048])
+def test_gather_stream(spec, window):
+    n, table = 4096, 2048
+    idx = jnp.asarray(gs.make_indices(n, table, window, seed=3))
+    tables = tuple(jax.random.normal(k(i + 100), (table,)) for i in range(4))
+    expected = ref.gather_stream(tables, idx, ai=6)
+    got = ops.gather_stream(idx, tables, CoarseningConfig.parse(spec),
+                            ai=6, block=256)
+    np.testing.assert_allclose(got, expected, rtol=1e-5, atol=1e-5)
+
+
+def test_make_indices_locality():
+    idx = gs.make_indices(4096, 4096, 64, seed=0)
+    # every 64-run stays within a 64-wide window
+    for blk in range(0, 4096, 64):
+        run = idx[blk:blk + 64]
+        assert run.max() - run.min() < 64 or (run.max() - run.min()) > 4000
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4",
+                                  "con2+simd2"])
+@pytest.mark.parametrize("mnk", [(256, 256, 256), (512, 384, 256)])
+def test_matmul(spec, mnk):
+    m, n, kk = mnk
+    a = jax.random.normal(k(200), (m, kk))
+    b = jax.random.normal(k(201), (kk, n))
+    got = ops.matmul(a, b, CoarseningConfig.parse(spec), bm=32, bn=64, bk=128)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a = jax.random.normal(k(210), (256, 256), dtype)
+    b = jax.random.normal(k(211), (256, 256), dtype)
+    got = ops.matmul(a, b, CoarseningConfig.parse("con2"), bm=64, bn=128, bk=128)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        got, ref.matmul(a, b), rtol=tol, atol=tol * 8)
+
+
+# ---------------------------------------------------------------------------
+# stencil / scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4"])
+def test_stencil(spec):
+    x = jax.random.normal(k(300), (128, 256))
+    got = ops.stencil5(x, CoarseningConfig.parse(spec), block_rows=8)
+    np.testing.assert_allclose(got, ref.stencil5(x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4"])
+def test_dp_scan(spec):
+    cost = jax.random.uniform(k(400), (64, 256))
+    got = ops.dp_scan(cost, CoarseningConfig.parse(spec))
+    np.testing.assert_allclose(got, ref.dp_scan(cost), rtol=1e-5, atol=1e-5)
+
+
+def test_dp_scan_rejects_gapped():
+    with pytest.raises(ValueError):
+        ops.dp_scan(jnp.ones((8, 256)), CoarseningConfig.parse("gap2"))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4"])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 128)])
+def test_flash_attention(spec, causal, window):
+    b, h, hkv, s, d = 2, 4, 2, 512, 64
+    q = jax.random.normal(k(500), (b, h, s, d)) * 0.5
+    kk = jax.random.normal(k(501), (b, hkv, s, d)) * 0.5
+    v = jax.random.normal(k(502), (b, hkv, s, d))
+    expected = ref.attention(q, kk, v, causal=causal, window=window)
+    got = ops.flash_attention(q, kk, v, CoarseningConfig.parse(spec),
+                              bq=64, bkv=64, causal=causal, window=window)
+    np.testing.assert_allclose(got, expected, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("hkv", [1, 4])
+def test_flash_attention_gqa(hkv):
+    b, h, s, d = 1, 4, 256, 32
+    q = jax.random.normal(k(510), (b, h, s, d)) * 0.5
+    kk = jax.random.normal(k(511), (b, hkv, s, d)) * 0.5
+    v = jax.random.normal(k(512), (b, hkv, s, d))
+    got = ops.flash_attention(q, kk, v, CoarseningConfig.parse("con2"),
+                              bq=64, bkv=64)
+    np.testing.assert_allclose(got, ref.attention(q, kk, v),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd / rglru
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4"])
+def test_ssd_consecutive(spec):
+    b, h, g, s, p, n = 2, 8, 2, 256, 32, 16
+    x = jax.random.normal(k(600), (b, h, s, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(601), (b, h, s))) * 0.1
+    a = -jnp.exp(jax.random.normal(k(602), (h,)) * 0.3)
+    bm = jax.random.normal(k(603), (b, g, s, n)) * 0.3
+    cm = jax.random.normal(k(604), (b, g, s, n)) * 0.3
+    expected = ops.ssd(x, dt, a, bm, cm, backend="ref")
+    got = ops.ssd(x, dt, a, bm, cm, CoarseningConfig.parse(spec), chunk=64)
+    np.testing.assert_allclose(got, expected, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_gapped_groups1():
+    b, h, s, p, n = 2, 8, 128, 32, 16
+    x = jax.random.normal(k(610), (b, h, s, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(611), (b, h, s))) * 0.1
+    a = -jnp.exp(jax.random.normal(k(612), (h,)) * 0.3)
+    bm = jax.random.normal(k(613), (b, 1, s, n)) * 0.3
+    cm = jax.random.normal(k(614), (b, 1, s, n)) * 0.3
+    expected = ops.ssd(x, dt, a, bm, cm, backend="ref")
+    got = ops.ssd(x, dt, a, bm, cm, CoarseningConfig.parse("gap4"), chunk=64)
+    np.testing.assert_allclose(got, expected, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_gapped_rejects_multigroup():
+    with pytest.raises(ValueError):
+        ops.ssd(jnp.ones((1, 8, 128, 16)), jnp.ones((1, 8, 128)),
+                -jnp.ones((8,)), jnp.ones((1, 2, 128, 8)),
+                jnp.ones((1, 2, 128, 8)), CoarseningConfig.parse("gap2"))
+
+
+def test_ssd_chunked_matches_naive():
+    b, s, h, p, g, n = 2, 128, 4, 16, 1, 8
+    x = jax.random.normal(k(620), (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k(621), (b, s, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(k(622), (h,)) * 0.3)
+    bm = jax.random.normal(k(623), (b, s, g, n)) * 0.3
+    cm = jax.random.normal(k(624), (b, s, g, n)) * 0.3
+    np.testing.assert_allclose(ref.ssd_chunked(x, dt, a, bm, cm, chunk=32),
+                               ref.ssd(x, dt, a, bm, cm),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4"])
+@pytest.mark.parametrize("window,block", [(1024, 256), (512, 512)])
+def test_windowed_gather(spec, window, block):
+    """Scalar-prefetch windowed gather (the true LSU-cache implementation:
+    data-dependent 2L-wide window DMA per slice) matches the oracle."""
+    from repro.kernels import windowed_gather as wg
+    n, table = 1 << 13, 1 << 13
+    idx = jnp.asarray(gs.make_indices(n, table, window, seed=7))
+    tbl = jax.random.normal(k(850), (table,))
+    fn = wg.make_kernel(n, table, CoarseningConfig.parse(spec),
+                        window=window, block=block)
+    np.testing.assert_allclose(fn(idx, tbl), wg.ref(idx, tbl),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_windowed_gather_rejects_bad_geometry():
+    from repro.kernels import windowed_gather as wg
+    with pytest.raises(ValueError):
+        wg.make_kernel(1 << 12, 1 << 12, CoarseningConfig(), window=100,
+                       block=256)
+
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "con8",
+                                  "gap2", "gap4", "gap8"])
+def test_embed_gather(spec):
+    from repro.kernels.embed_gather import ref_embed_gather
+    n, vocab, d = 2048, 512, 64
+    ids = jax.random.randint(k(800), (n,), 0, vocab)
+    table = jax.random.normal(k(801), (vocab, d))
+    got = ops.embed_gather(ids, table, CoarseningConfig.parse(spec),
+                           block=128)
+    np.testing.assert_allclose(got, ref_embed_gather(ids, table),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4"])
+def test_rglru(spec):
+    b, s, d = 2, 128, 512
+    x = jax.random.normal(k(700), (b, s, d))
+    r = jax.random.normal(k(701), (b, s, d))
+    i = jax.random.normal(k(702), (b, s, d))
+    ap = jax.random.normal(k(703), (d,))
+    got = ops.rglru(x, r, i, ap, CoarseningConfig.parse(spec),
+                    block_d=64, block_t=32)
+    np.testing.assert_allclose(got, ref.rglru(x, r, i, ap),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step + one decode step on CPU; asserts shapes and finiteness.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    tok = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.is_encdec:
+        batch["src_frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (b, 16, cfg.d_model)) * 0.1
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(3), (b, s, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.lm_init(KEY, cfg)
+    batch = _batch(cfg)
+
+    hidden, aux = jax.jit(lambda p, b: M.lm_apply(p, b, cfg))(params, batch)
+    assert hidden.shape == (2, 32, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+    ocfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, m), g = jax.value_and_grad(
+            lambda pp: M.lm_loss(pp, b, cfg), has_aux=True)(p)
+        p2, o2, gn = adamw_update(p, g, o, ocfg)
+        return p2, o2, loss, gn
+
+    p2, o2, loss, gn = step(params, opt, batch)
+    assert np.isfinite(float(loss)) and np.isfinite(float(gn))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+    # loss decreases over a few steps on the structured synthetic stream
+    l0 = float(loss)
+    b2 = batch
+    p, o = p2, o2
+    for _ in range(3):
+        p, o, loss, _ = step(p, o, b2)
+    assert float(loss) < l0 + 0.5       # no explosion
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.lm_init(KEY, cfg)
+    b, s_max = 2, 64
+    cache = M.lm_init_cache(cfg, b, s_max, enc_len=16)
+    if cfg.is_encdec:
+        # provide encoder kv (stub: zeros is fine for shape/finite checks)
+        pass
+    tok = jnp.ones((b, 1), jnp.int32)
+    step = jax.jit(lambda p, c, t, po: M.lm_decode_step(p, c, t, po, cfg))
+    logits, cache = step(params, cache, tok, jnp.zeros((b,), jnp.int32))
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    logits2, cache = step(params, cache, tok, jnp.ones((b,), jnp.int32))
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+def test_decode_matches_forward_qwen3():
+    """Teacher-forced decode must reproduce the parallel forward logits."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(KEY, cfg)
+    b, s = 1, 8
+    tok = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, cfg.vocab)
+    hidden, _ = M.lm_apply(params, {"tokens": tok}, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    full_logits = np.asarray((hidden @ head.astype(hidden.dtype))
+                             .astype(jnp.float32))
+
+    cache = M.lm_init_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, t, po: M.lm_decode_step(p, c, t, po, cfg))
+    for t in range(s):
+        logits, cache = step(params, cache, tok[:, t:t + 1],
+                             jnp.full((b,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits), full_logits[:, t],
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_decode_matches_forward_ssm():
+    """Same property for the recurrent family (state correctness)."""
+    cfg = get_config("mamba2-370m").reduced()
+    params = M.lm_init(KEY, cfg)
+    b, s = 1, 8
+    tok = jax.random.randint(jax.random.PRNGKey(9), (b, s), 0, cfg.vocab)
+    hidden, _ = M.lm_apply(params, {"tokens": tok}, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    full_logits = np.asarray((hidden @ head.astype(hidden.dtype))
+                             .astype(jnp.float32))
+    cache = M.lm_init_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, t, po: M.lm_decode_step(p, c, t, po, cfg))
+    for t in range(s):
+        logits, cache = step(params, cache, tok[:, t:t + 1],
+                             jnp.full((b,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits), full_logits[:, t],
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_mrope_positions_change_output():
+    cfg = get_config("qwen2-vl-7b").reduced()
+    params = M.lm_init(KEY, cfg)
+    b, s = 1, 16
+    tok = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, cfg.vocab)
+    pos_text = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3_a = jnp.stack([pos_text] * 3, axis=1)     # (B,3,S)
+    pos3_b = pos3_a.at[:, 1].add(5)      # different spatial positions
+    ha, _ = M.lm_apply(params, {"tokens": tok, "pos3": pos3_a}, cfg)
+    hb, _ = M.lm_apply(params, {"tokens": tok, "pos3": pos3_b}, cfg)
+    assert float(jnp.max(jnp.abs(ha - hb))) > 1e-4
+
+
+def test_local_vs_global_attention_differs():
+    cfg = get_config("gemma3-1b").reduced(window=4)
+    params = M.lm_init(KEY, cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(5), (1, 32), 0, cfg.vocab)
+    h1, _ = M.lm_apply(params, {"tokens": tok}, cfg)
+    cfg_g = cfg.reduced(window=32)       # window = seq -> effectively global
+    h2, _ = M.lm_apply(params, {"tokens": tok}, cfg_g)
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-5

@@ -1,0 +1,89 @@
+"""Property tests on the analytic perf model (the §Roofline source)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import ARCHS, get_config
+from repro.core.perfmodel import (MeshInfo, train_step_terms,
+                                  decode_step_terms, prefill_step_terms)
+
+MESH = MeshInfo(dp=16, tp=16)
+SET = dict(max_examples=15, deadline=None)
+
+
+@given(arch=st.sampled_from(["qwen3-0.6b", "yi-34b", "mamba2-370m",
+                             "olmoe-1b-7b"]),
+       logb=st.integers(4, 9))
+@settings(**SET)
+def test_flops_linear_in_batch(arch, logb):
+    cfg = get_config(arch)
+    t1 = train_step_terms(cfg, seq=4096, batch=2 ** logb, mesh=MESH)
+    t2 = train_step_terms(cfg, seq=4096, batch=2 ** (logb + 1), mesh=MESH)
+    assert t2.flops == pytest.approx(2 * t1.flops, rel=0.01)
+
+
+@given(nm=st.sampled_from([1, 2, 4, 8]))
+@settings(**SET)
+def test_collectives_increase_with_microbatching(nm):
+    cfg = get_config("yi-34b")
+    t1 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH, n_micro=nm)
+    t2 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH, n_micro=2 * nm)
+    assert t2.coll_bytes > t1.coll_bytes          # more param re-gathers
+
+
+def test_sp_reduces_tp_wire():
+    cfg = get_config("mamba2-370m")
+    t0 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH)
+    t1 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH,
+                          sp_activations=True)
+    assert t1.notes["tp_allreduce"] == pytest.approx(
+        0.5 * t0.notes["tp_allreduce"])
+
+
+def test_int8_reduces_rs_bytes_4x():
+    cfg = get_config("yi-34b")
+    t0 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH)
+    t1 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH,
+                          grad_compression="int8")
+    assert t1.notes["fsdp_rs"] == pytest.approx(0.25 * t0.notes["fsdp_rs"])
+    assert t1.notes["fsdp_ag"] == t0.notes["fsdp_ag"]   # gathers unchanged
+
+
+def test_bucketing_cuts_op_count():
+    cfg = get_config("yi-34b")
+    t0 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH)
+    t1 = train_step_terms(cfg, seq=4096, batch=256, mesh=MESH,
+                          bucket_bytes=64 * 2 ** 20)
+    assert t1.notes["coll_ops"] < t0.notes["coll_ops"]
+
+
+def test_replicated_serve_weights_drop_gather():
+    cfg = get_config("olmoe-1b-7b")
+    t0 = decode_step_terms(cfg, seq=32768, batch=128, mesh=MESH)
+    t1 = decode_step_terms(cfg, seq=32768, batch=128, mesh=MESH,
+                           replicate_serve_weights=True)
+    assert "fsdp_ag" in t0.notes and "fsdp_ag" not in t1.notes
+    assert t1.coll_bytes < 0.1 * t0.coll_bytes
+
+
+@given(arch=st.sampled_from(list(ARCHS)))
+@settings(**SET)
+def test_all_terms_finite_positive(arch):
+    cfg = get_config(arch)
+    for fn, kw in ((train_step_terms, dict(seq=4096, batch=256)),
+                   (prefill_step_terms, dict(seq=32768, batch=32)),
+                   (decode_step_terms, dict(seq=32768, batch=128))):
+        t = fn(cfg, mesh=MESH, **kw)
+        assert t.flops > 0 and t.hbm_bytes > 0 and t.coll_bytes >= 0
+
+
+def test_window_attention_cheaper_than_global():
+    g3 = get_config("gemma3-1b")           # 5:1 local:global, window 512
+    t_local = train_step_terms(g3, seq=32768, batch=32, mesh=MESH)
+    # hypothetical all-global variant of the same config
+    import dataclasses
+    kv = {f.name: getattr(g3, f.name) for f in dataclasses.fields(g3)}
+    kv["pattern_period"] = None
+    g3_global = type(g3)(**kv)
+    t_global = train_step_terms(g3_global, seq=32768, batch=32, mesh=MESH)
+    assert t_local.flops < t_global.flops

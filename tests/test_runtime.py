@@ -1,0 +1,99 @@
+"""Fault-tolerance runtime: watchdog, preemption, retry, elastic plan."""
+import signal
+import time
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import (StepWatchdog, PreemptionHandler, retry_step,
+                           SimulatedFailure, elastic_restore_plan)
+
+
+def test_watchdog_flags_straggler():
+    flagged = []
+    wd = StepWatchdog(threshold=3.0,
+                      on_straggler=lambda s, dt, ema: flagged.append(s))
+    for i in range(10):
+        wd.observe(i, 0.1)
+    assert not flagged
+    wd.observe(10, 1.0)                  # 10x the EMA
+    assert flagged == [10]
+    # straggler sample must not poison the EMA
+    assert wd.ema < 0.2
+
+
+def test_watchdog_context_manager():
+    wd = StepWatchdog(threshold=100.0, hang_timeout=60.0)
+    with wd.step(0):
+        time.sleep(0.01)
+    assert wd.ema is not None and wd.ema >= 0.01
+
+
+def test_watchdog_hang_timer_fires():
+    hung = []
+    wd = StepWatchdog(hang_timeout=0.05, on_hang=lambda s: hung.append(s))
+    wd._arm(3)
+    time.sleep(0.15)
+    assert hung == [3]
+
+
+def test_preemption_checkpoint_then_exit():
+    pre = PreemptionHandler().install()
+    ran, exited = [], []
+    try:
+        def body(step):
+            ran.append(step)
+            if step == 4:
+                pre.trigger()            # simulated SIGTERM mid-run
+
+        last = pre.run_until_preempted(body, on_exit=lambda s: exited.append(s),
+                                       max_steps=100)
+    finally:
+        pre.uninstall()
+    assert ran == [0, 1, 2, 3, 4]
+    assert exited == [5] and last == 5
+
+
+def test_preemption_real_signal():
+    pre = PreemptionHandler(signals=(signal.SIGUSR1,)).install()
+    try:
+        signal.raise_signal(signal.SIGUSR1)
+        assert pre.preempted
+    finally:
+        pre.uninstall()
+
+
+def test_retry_recovers_then_raises():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise SimulatedFailure("boom")
+        return "ok"
+
+    assert retry_step(flaky, retries=3, backoff_s=0.001) == "ok"
+    assert len(calls) == 3
+
+    with pytest.raises(SimulatedFailure):
+        retry_step(lambda: (_ for _ in ()).throw(SimulatedFailure("x")),
+                   retries=1, backoff_s=0.001)
+
+
+def test_elastic_plan_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = elastic_restore_plan(mesh, global_batch=8,
+                                param_specs={"w": P("data", "model")})
+    assert plan.dp_degree == 1 and plan.tp_degree == 1
+    assert plan.batch_per_replica == 8
+    assert not plan.notes
+
+
+def test_elastic_plan_flags_indivisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = elastic_restore_plan(mesh, global_batch=7, param_specs={})
+    assert plan.batch_per_replica == 7   # 7 // 1
+    mesh2 = jax.make_mesh((1,), ("data",))
+    plan2 = elastic_restore_plan(mesh2, global_batch=8, param_specs={})
+    assert plan2.dp_degree == 1
