@@ -11,6 +11,7 @@ Tables (one per paper figure):
   fig13  — divergence-degree sweep (Fig. 13)
   coll   — beyond-paper: collective bucket-coarsening
   roofline — §Roofline per (arch x shape), analytic terms
+  tuned  — autotuner pick vs base vs the paper's fixed degrees
 """
 import argparse
 import json
@@ -21,7 +22,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline)
+                        roofline, tuned)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -32,6 +33,7 @@ TABLES = {
     "fig13": fig13_divdeg.main,
     "coll": collectives_coarsening.main,
     "roofline": roofline.main,
+    "tuned": tuned.main,
 }
 
 

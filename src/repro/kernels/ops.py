@@ -4,6 +4,11 @@ Each op takes a CoarseningConfig and dispatches to the Pallas kernel
 (interpret=True on CPU; on TPU the same pallas_call lowers via Mosaic) or, for
 ``backend='ref'``, to the pure-jnp oracle — the path used by model training
 on CPU and by the XLA dry-run lowering.
+
+The ``cfg`` argument also accepts strings: a spec label ("con4+pipe2") is
+parsed, and ``"auto"`` resolves through the repro.tune autotuner — modeled
+ranking against the persisted tuning cache, so the second call with the same
+geometry never re-searches.
 """
 from __future__ import annotations
 
@@ -28,15 +33,44 @@ from repro.kernels import (
 BASE = CoarseningConfig()
 
 
+@functools.lru_cache(maxsize=1024)
+def _auto_cfg(cache_path, family, shape, dtype, backend, params):
+    from repro.tune import KernelSpec, autotune, default_cache
+    spec = KernelSpec(family=family, shape=shape, dtype=dtype,
+                      backend=backend, params=params)
+    return autotune(spec, cache=default_cache())
+
+
+def resolve_cfg(cfg, family: str, shape, *, dtype="float32",
+                backend: str = "pallas", **params) -> CoarseningConfig:
+    """Normalise an op's cfg argument: CoarseningConfig passes through,
+    "auto" goes through the tuner (cache-backed), any other string is a
+    coarsening spec label."""
+    if isinstance(cfg, CoarseningConfig):
+        return cfg
+    if cfg == "auto":
+        if backend == "ref":              # oracle path: nothing to tune
+            return BASE
+        # keyed on the cache path so repointing REPRO_TUNE_CACHE is honoured
+        from repro.tune import default_cache_path
+        return _auto_cfg(default_cache_path(), family,
+                         tuple(int(s) for s in shape), str(dtype),
+                         backend, tuple(sorted(params.items())))
+    return CoarseningConfig.parse(cfg)
+
+
 @functools.lru_cache(maxsize=256)
 def _ew_fn(n, cfg, n_loads, ai, variant, block):
     return jax.jit(_ew.make_kernel(n, cfg, n_loads=n_loads, ai=ai,
                                    variant=variant, block=block))
 
 
-def ew_stream(inputs, cfg: CoarseningConfig = BASE, *, ai: int = 6,
+def ew_stream(inputs, cfg: CoarseningConfig | str = BASE, *, ai: int = 6,
               variant: str = "base", block: int = 1024):
-    fn = _ew_fn(inputs[0].shape[0], cfg, len(inputs), ai, variant, block)
+    n = inputs[0].shape[0]
+    cfg = resolve_cfg(cfg, "ew_stream", (n,), n_loads=len(inputs), ai=ai,
+                      variant=variant, block=block)
+    fn = _ew_fn(n, cfg, len(inputs), ai, variant, block)
     return fn(*inputs)
 
 
@@ -46,8 +80,11 @@ def _gather_fn(n, table, cfg, n_loads, ai, block):
                                        block=block))
 
 
-def gather_stream(idx, tables, cfg: CoarseningConfig = BASE, *, ai: int = 6,
-                  block: int = 1024):
+def gather_stream(idx, tables, cfg: CoarseningConfig | str = BASE, *,
+                  ai: int = 6, block: int = 1024):
+    cfg = resolve_cfg(cfg, "gather_stream",
+                      (idx.shape[0], tables[0].shape[0]),
+                      n_loads=len(tables), ai=ai, block=block)
     fn = _gather_fn(idx.shape[0], tables[0].shape[0], cfg, len(tables), ai, block)
     return fn(idx, *tables)
 
@@ -59,10 +96,12 @@ def _matmul_fn(m, n, k, cfg, bm, bn, bk, backend):
     return jax.jit(_matmul.make_kernel(m, n, k, cfg, bm=bm, bn=bn, bk=bk))
 
 
-def matmul(a, b, cfg: CoarseningConfig = BASE, *, bm: int = 128, bn: int = 128,
-           bk: int = 256, backend: str = "pallas"):
+def matmul(a, b, cfg: CoarseningConfig | str = BASE, *, bm: int = 128,
+           bn: int = 128, bk: int = 256, backend: str = "pallas"):
     m, k = a.shape
     n = b.shape[1]
+    cfg = resolve_cfg(cfg, "matmul", (m, n, k), dtype=a.dtype.name,
+                      backend=backend, bm=bm, bn=bn, bk=bk)
     return _matmul_fn(m, n, k, cfg, bm, bn, bk, backend)(a, b)
 
 
@@ -71,7 +110,8 @@ def _stencil_fn(rows, cols, cfg, block_rows):
     return jax.jit(_stencil.make_kernel(rows, cols, cfg, block_rows=block_rows))
 
 
-def stencil5(x, cfg: CoarseningConfig = BASE, *, block_rows: int = 8):
+def stencil5(x, cfg: CoarseningConfig | str = BASE, *, block_rows: int = 8):
+    cfg = resolve_cfg(cfg, "stencil5", x.shape, block_rows=block_rows)
     return _stencil_fn(x.shape[0], x.shape[1], cfg, block_rows)(x)
 
 
@@ -80,7 +120,8 @@ def _scan_fn(rows, cols, cfg):
     return jax.jit(_scan.make_kernel(rows, cols, cfg))
 
 
-def dp_scan(cost, cfg: CoarseningConfig = BASE):
+def dp_scan(cost, cfg: CoarseningConfig | str = BASE):
+    cfg = resolve_cfg(cfg, "dp_scan", cost.shape)
     return _scan_fn(cost.shape[0], cost.shape[1], cfg)(cost)
 
 
@@ -93,11 +134,13 @@ def _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend):
                                       causal=causal, window=window))
 
 
-def flash_attention(q, k, v, cfg: CoarseningConfig = BASE, *, bq: int = 128,
-                    bkv: int = 128, causal: bool = True,
+def flash_attention(q, k, v, cfg: CoarseningConfig | str = BASE, *,
+                    bq: int = 128, bkv: int = 128, causal: bool = True,
                     window: int | None = None, backend: str = "pallas"):
     b, h, s, d = q.shape
     hkv = k.shape[1]
+    cfg = resolve_cfg(cfg, "flash_attention", (b, h, hkv, s, d),
+                      dtype=q.dtype.name, backend=backend, bq=bq, bkv=bkv)
     return _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend)(q, k, v)
 
 
@@ -113,11 +156,13 @@ def _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend):
     return jax.jit(_ssd.make_kernel(b, h, g, s, p, n, cfg, chunk=chunk))
 
 
-def ssd(x, dt, a, bmat, cmat, cfg: CoarseningConfig = BASE, *,
+def ssd(x, dt, a, bmat, cmat, cfg: CoarseningConfig | str = BASE, *,
         chunk: int = 64, backend: str = "pallas"):
     """x:(B,H,S,P) dt:(B,H,S) a:(H,) bmat/cmat:(B,G,S,N)."""
     b, h, s, p = x.shape
     g, n = bmat.shape[1], bmat.shape[3]
+    cfg = resolve_cfg(cfg, "ssd", (b, h, g, s, p, n), dtype=x.dtype.name,
+                      backend=backend, chunk=chunk)
     return _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend)(x, dt, a, bmat, cmat)
 
 
@@ -127,8 +172,11 @@ def _embed_fn(n, vocab, d, cfg, block):
     return jax.jit(_eg.make_kernel(n, vocab, d, cfg, block=block))
 
 
-def embed_gather(ids, table, cfg: CoarseningConfig = BASE, *,
+def embed_gather(ids, table, cfg: CoarseningConfig | str = BASE, *,
                  block: int = 256):
+    cfg = resolve_cfg(cfg, "embed_gather",
+                      (ids.shape[0], table.shape[0], table.shape[1]),
+                      block=block)
     return _embed_fn(ids.shape[0], table.shape[0], table.shape[1], cfg,
                      block)(ids, table)
 
@@ -141,7 +189,9 @@ def _rglru_fn(b, s, d, cfg, block_d, block_t, backend):
                                       block_t=block_t))
 
 
-def rglru(x, r, i, a_param, cfg: CoarseningConfig = BASE, *,
+def rglru(x, r, i, a_param, cfg: CoarseningConfig | str = BASE, *,
           block_d: int = 128, block_t: int = 64, backend: str = "pallas"):
     b, s, d = x.shape
+    cfg = resolve_cfg(cfg, "rglru", (b, s, d), dtype=x.dtype.name,
+                      backend=backend, block_d=block_d, block_t=block_t)
     return _rglru_fn(b, s, d, cfg, block_d, block_t, backend)(x, r, i, a_param)

@@ -23,7 +23,15 @@ from repro.models.config import ModelConfig
 
 class BatchedServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 tune: str | None = None):
+        if tune:
+            # pre-tune the ops-level kernel families at prompt-ingest scale
+            # (slots x max_len tokens — the largest geometry this server
+            # touches; per-token decode shapes are below the coarsenable
+            # minimum and dispatch uncoarsened)
+            from repro.tune import warm_from_flag
+            warm_from_flag(cfg, tune, seq=max_len, batch=slots)
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.temperature = temperature
@@ -101,6 +109,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    from repro.tune import TUNE_CHOICES
+    ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
+                    help="warm the coarsening tuning cache before serving")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -108,7 +119,7 @@ def main():
         cfg = cfg.reduced()
     params = M.lm_init(jax.random.PRNGKey(0), cfg)
     server = BatchedServer(cfg, params, slots=args.slots,
-                           max_len=args.max_len)
+                           max_len=args.max_len, tune=args.tune)
 
     rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))

@@ -41,7 +41,15 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
           ckpt_dir: str | None, n_micro: int = 1, remat: str = "none",
           lr: float = 3e-4, save_every: int = 50, seed: int = 0,
           log_every: int = 10, mesh: Mesh | None = None,
-          fail_at_step: int | None = None):
+          fail_at_step: int | None = None, tune: str | None = None):
+    if tune:
+        # pre-tune the ops-level kernel families at this run's geometry so
+        # any cfg="auto" dispatch (benchmarks, examples, custom step fns)
+        # resolves from the persisted cache instead of searching.  The
+        # standard train step itself lowers through kernels.ref/XLA, so
+        # this warms the cache rather than changing the step below.
+        from repro.tune import warm_from_flag
+        warm_from_flag(cfg, tune, seq=seq, batch=batch)
     mesh = mesh or make_mesh_for_host()
     with mesh:
         return _train_in_mesh(cfg, steps=steps, batch=batch, seq=seq,
@@ -137,6 +145,9 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
+    from repro.tune import TUNE_CHOICES
+    ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
+                    help="warm the coarsening tuning cache before training")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -145,7 +156,7 @@ def main():
     losses, _ = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                       ckpt_dir=args.ckpt_dir, n_micro=args.n_micro,
                       remat=args.remat, lr=args.lr,
-                      save_every=args.save_every)
+                      save_every=args.save_every, tune=args.tune)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 
 

@@ -1,0 +1,22 @@
+"""repro.tune — the coarsening autotuner subsystem.
+
+Turns the paper's manual (kind, degree) x replication x SIMD exploration
+into a search-and-cache loop: `search` ranks valid candidates with the
+analytic cost model (optionally refined by measured timings), `autotune`
+persists winners to a versioned JSON cache, and `kernels.ops` resolves
+``cfg="auto"`` through it.
+"""
+from repro.tune.cache import (CACHE_VERSION, ENV_VAR, KernelSpec,
+                              TuningCache, default_cache, default_cache_path)
+from repro.tune.search import (Candidate, TuneResult, autotune,
+                               enumerate_candidates, model_cost, search)
+from repro.tune.warm import (TUNE_CHOICES, wall_measurer, warm_for_model,
+                             warm_from_flag)
+
+__all__ = [
+    "CACHE_VERSION", "ENV_VAR", "KernelSpec", "TuningCache",
+    "default_cache", "default_cache_path",
+    "Candidate", "TuneResult", "autotune", "enumerate_candidates",
+    "model_cost", "search", "TUNE_CHOICES", "wall_measurer",
+    "warm_for_model", "warm_from_flag",
+]

@@ -1,0 +1,155 @@
+"""Versioned JSON persistence for autotuned coarsening configs.
+
+One cache file holds the winner per (kernel family, shape, dtype, backend,
+tuning-relevant params) — the FPGA-world analog of keeping the best
+(num_coarsened_items, num_compute_units, num_simd_work_items) triple per
+kernel after a sweep, so production launches never pay the search again.
+
+The file is versioned: bumping CACHE_VERSION (or changing the analytic cost
+model in a way that invalidates stored winners) makes old files load as
+empty, which is the invalidation story — delete the file or bump the version.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+from repro.core.coarsening import CoarseningConfig
+
+CACHE_VERSION = 1
+ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", f"tune_v{CACHE_VERSION}.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Identity of one tunable kernel instance (the cache key).
+
+    params holds only tuning-relevant compile-time knobs (block sizes,
+    arithmetic intensity, divergence variant, ...) as a sorted tuple of
+    (name, value) pairs so the spec stays hashable and JSON-stable.
+    """
+
+    family: str
+    shape: tuple
+    dtype: str = "float32"
+    backend: str = "pallas"
+    params: tuple = ()
+
+    @classmethod
+    def make(cls, family: str, shape, dtype: str = "float32",
+             backend: str = "pallas", **params) -> "KernelSpec":
+        return cls(family=family, shape=tuple(int(s) for s in shape),
+                   dtype=str(dtype), backend=backend,
+                   params=tuple(sorted(params.items())))
+
+    @property
+    def p(self) -> dict:
+        return dict(self.params)
+
+    @property
+    def key(self) -> str:
+        shp = "x".join(str(s) for s in self.shape)
+        prm = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.family}|{shp}|{self.dtype}|{self.backend}|{prm}"
+
+
+class TuningCache:
+    """Winner-per-spec store with atomic JSON persistence.
+
+    Entries record the chosen config label plus how it was chosen
+    (source 'model' vs 'measured' and the score), so a later session can
+    tell a modeled prior from a measured result.
+    """
+
+    def __init__(self, path: Optional[str] = None, autoload: bool = True):
+        self.path = path or default_cache_path()
+        self.entries: dict[str, dict] = {}
+        self.stats = {"hits": 0, "misses": 0}
+        self._warned_unwritable = False
+        if autoload:
+            self.load()
+
+    def load(self) -> None:
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            return
+        if not isinstance(blob, dict) or blob.get("version") != CACHE_VERSION:
+            return                      # stale/corrupt cache: treat as empty
+        entries = blob.get("entries", {})
+        if isinstance(entries, dict):
+            self.entries = dict(entries)
+
+    def save(self) -> None:
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        blob = {"version": CACHE_VERSION, "entries": self.entries}
+        # atomic replace so a crashed process never truncates the cache
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(
+            os.path.abspath(self.path)), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def get(self, spec: KernelSpec) -> Optional[CoarseningConfig]:
+        e = self.entries.get(spec.key)
+        if e is None:
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return CoarseningConfig.parse(e["cfg"])
+
+    def put(self, spec: KernelSpec, cfg: CoarseningConfig, *,
+            modeled_s: float, measured_s: Optional[float] = None,
+            source: str = "model", persist: bool = True) -> None:
+        self.entries[spec.key] = {
+            "cfg": cfg.label,
+            "modeled_s": modeled_s,
+            "measured_s": measured_s,
+            "source": source,
+        }
+        if persist:
+            try:
+                self.save()
+            except OSError as e:
+                # an unwritable cache must not break the kernel dispatch:
+                # keep the winner in memory and warn once per cache
+                if not self._warned_unwritable:
+                    self._warned_unwritable = True
+                    print(f"repro.tune: cannot persist tuning cache to "
+                          f"{self.path}: {e} (continuing in-memory)")
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+_DEFAULT: dict[str, TuningCache] = {}
+
+
+def default_cache() -> TuningCache:
+    """Process-wide cache singleton, re-resolved per path so tests can
+    repoint via the REPRO_TUNE_CACHE env var."""
+    path = default_cache_path()
+    cache = _DEFAULT.get(path)
+    if cache is None:
+        cache = _DEFAULT[path] = TuningCache(path)
+    return cache

@@ -1,0 +1,336 @@
+"""Coarsening autotuner: enumerate, rank, (optionally) measure, pick.
+
+The paper's methodology — sweep (coarsening kind, degree) against pipeline
+replication and SIMD width per kernel and pick the per-access-pattern winner
+— as reusable harness code.  Three strategies:
+
+  model       rank every valid candidate by the core/analysis analytic cost
+              (the perfmodel prior; free, no execution)
+  exhaustive  measure every valid candidate with the supplied timer and rank
+              by wall time (the paper's full sweep)
+  greedy      measure only the top-k of the model ranking and pick the best
+              measured one (the few-steps-go-a-long-way recipe: the prior
+              prunes the space, measurement breaks the near-ties)
+
+Candidate validity comes from the SAME divisibility rules the kernels
+enforce (plan_stream / plan_rows geometry), so an autotuned config can
+always be instantiated.  Mechanisms a kernel does not implement (e.g.
+replication outside pallas_stream_call, SIMD under data-dependent control
+flow) are excluded from its space rather than modeled-and-unrunnable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+from repro.core import analysis
+from repro.core.coarsening import (
+    CoarseningConfig, KIND_NONE, KIND_CONSECUTIVE, KIND_GAPPED, plan_stream)
+from repro.tune.cache import KernelSpec, TuningCache, default_cache
+
+DEGREES = (1, 2, 4, 8)
+REPLICATIONS = (1, 2, 4)
+VECTOR_WIDTHS = (1, 2)
+
+# ew_stream variants whose predicate depends on loaded data: like the OpenCL
+# offline compiler, we refuse to vectorize these (coarsening.py simd_ok).
+DATA_DEPENDENT_VARIANTS = frozenset(
+    {"if_in", "for_in_if_in", "div2", "div4"})
+
+# divergence parameters fed to stream_cost per ew_stream variant:
+# (paths, uniform, bounded_trip_factor)
+_VARIANT_DIVERGENCE = {
+    "base": (1, False, 1.0),
+    "if_id": (2, True, 1.0),
+    "if_in": (2, False, 1.0),
+    "for_const_if_id": (2, True, 1.0),
+    "for_in_if_in": (2, False, 2.0),
+    "div2": (2, False, 1.0),
+    "div4": (4, False, 1.0),
+}
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
+                "int8": 1}
+
+# counts search() invocations; tests assert cfg="auto" cache hits skip this
+SEARCH_COUNT = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    cfg: CoarseningConfig
+    modeled_s: float
+    measured_s: Optional[float] = None
+
+    @property
+    def score(self) -> float:
+        return self.measured_s if self.measured_s is not None else self.modeled_s
+
+
+@dataclasses.dataclass
+class TuneResult:
+    spec: KernelSpec
+    best: CoarseningConfig
+    candidates: list         # Candidates, ranked best-first
+    source: str              # 'model' | 'measured' | 'cache'
+
+
+# ---------------------------------------------------------------------------
+# per-family candidate legality
+# ---------------------------------------------------------------------------
+
+def _kind_degree_pairs(degrees: Sequence[int]):
+    yield KIND_NONE, 1
+    for d in degrees:
+        if d > 1:
+            yield KIND_CONSECUTIVE, d
+            yield KIND_GAPPED, d
+
+
+def enumerate_candidates(spec: KernelSpec,
+                         degrees: Sequence[int] = DEGREES,
+                         replications: Sequence[int] = REPLICATIONS,
+                         vector_widths: Sequence[int] = VECTOR_WIDTHS,
+                         ) -> list:
+    """All (kind, degree, replication, vector_width) configs the kernel
+    family can actually instantiate at this spec's geometry."""
+    fam, p = spec.family, spec.p
+    out = []
+
+    # Only ew_stream lowers through pallas_stream_call, which is the one
+    # place replication actually splits the grid; the other kernels carry
+    # cfg.replication as an inert field, so offering it here would select
+    # configs whose modeled benefit the implementation cannot deliver.
+
+    def stream_ok(n, cfg, block):
+        if n % (block * cfg.vector_width * cfg.degree):
+            return False
+        grid = n // (block * cfg.vector_width * cfg.degree)
+        return cfg.replication == 1 or grid % cfg.replication == 0
+
+    if fam == "ew_stream":
+        n, block = spec.shape[0], p.get("block", 1024)
+        simd_ok = p.get("variant", "base") not in DATA_DEPENDENT_VARIANTS
+        for kind, deg in _kind_degree_pairs(degrees):
+            for r in replications:
+                for vw in vector_widths:
+                    if vw > 1 and not simd_ok:
+                        continue
+                    cfg = CoarseningConfig(kind, deg, r, vw)
+                    if stream_ok(n, cfg, block):
+                        out.append(cfg)
+    elif fam in ("gather_stream", "embed_gather"):
+        n, block = spec.shape[0], p.get("block",
+                                        1024 if fam == "gather_stream" else 256)
+        vws = vector_widths if fam == "gather_stream" else (1,)
+        for kind, deg in _kind_degree_pairs(degrees):
+            for vw in vws:
+                cfg = CoarseningConfig(kind, deg, 1, vw)
+                if stream_ok(n, cfg, block):
+                    out.append(cfg)
+    elif fam == "matmul":
+        m, n, k = spec.shape
+        bm, bn, bk = p.get("bm", 128), p.get("bn", 128), p.get("bk", 256)
+        if k % bk == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                for vw in vector_widths:
+                    if m % (bm * deg) == 0 and n % (bn * vw) == 0:
+                        out.append(CoarseningConfig(kind, deg, 1, vw))
+    elif fam == "dp_scan":
+        rows = spec.shape[0]
+        for kind, deg in _kind_degree_pairs(degrees):
+            if kind == KIND_GAPPED:
+                continue               # breaks the sequential carry
+            if rows % deg == 0:
+                out.append(CoarseningConfig(kind, deg))
+    elif fam == "stencil5":
+        rows = spec.shape[0]
+        br = p.get("block_rows", 8)
+        for kind, deg in _kind_degree_pairs(degrees):
+            if rows % (br * deg) == 0:
+                out.append(CoarseningConfig(kind, deg))
+    elif fam == "flash_attention":
+        b, h, hkv, s, d = spec.shape
+        bq, bkv = p.get("bq", 128), p.get("bkv", 128)
+        if s % bkv == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if s % (bq * deg) == 0:
+                    out.append(CoarseningConfig(kind, deg))
+    elif fam == "ssd":
+        b, h, g, s, pp, nn = spec.shape
+        chunk = p.get("chunk", 64)
+        if s % chunk == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if h % deg:
+                    continue
+                if kind == KIND_GAPPED and g != 1:
+                    continue
+                if kind == KIND_CONSECUTIVE and (h // g) % deg:
+                    continue
+                out.append(CoarseningConfig(kind, deg))
+    elif fam == "rglru":
+        b, s, d = spec.shape
+        bd, bt = p.get("block_d", 128), p.get("block_t", 64)
+        if s % bt == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if d % (bd * deg) == 0:
+                    out.append(CoarseningConfig(kind, deg))
+    else:
+        raise ValueError(f"unknown tunable family {spec.family!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic cost (the perfmodel prior)
+# ---------------------------------------------------------------------------
+
+def _round_to(n: int, q: int) -> int:
+    return max(q, (n // q) * q)
+
+
+def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
+    """Modeled seconds for one candidate — the core/analysis pipeline model
+    evaluated at this spec's geometry."""
+    fam, p = spec.family, spec.p
+    dtb = _DTYPE_BYTES.get(spec.dtype, 4)
+
+    if fam == "ew_stream":
+        n, block = spec.shape[0], p.get("block", 1024)
+        paths, uniform, trips = _VARIANT_DIVERGENCE[p.get("variant", "base")]
+        plan = plan_stream(n, cfg, block=block)
+        return analysis.stream_cost(
+            plan, n_loads=p.get("n_loads", 8),
+            arith_per_elem=float(p.get("ai", 6)), dtype_bytes=dtb,
+            divergence_paths=paths, divergence_uniform=uniform,
+            bounded_trip_factor=trips).modeled_s
+
+    if fam == "gather_stream":
+        n, block = spec.shape[0], p.get("block", 1024)
+        plan = plan_stream(n, cfg, block=block)
+        return analysis.gather_cost(
+            plan, n_loads=p.get("n_loads", 8),
+            arith_per_elem=float(p.get("ai", 6)),
+            hit_rate=float(p.get("hit_rate", 0.854)),
+            window_elems=int(p.get("window_elems", 8192)),
+            dtype_bytes=dtb).modeled_s
+
+    if fam == "embed_gather":
+        n_ids, vocab, d = spec.shape
+        block = p.get("block", 256)
+        plan = plan_stream(n_ids, cfg, block=block)
+        # each id pulls a d-wide row from the VMEM-resident table window
+        return analysis.gather_cost(
+            plan, n_loads=1, arith_per_elem=float(d),
+            hit_rate=float(p.get("hit_rate", 1.0)),
+            window_elems=min(vocab * d, 1 << 21), dtype_bytes=dtb).modeled_s
+
+    if fam == "matmul":
+        m, n, k = spec.shape
+        return analysis.matmul_cost(
+            m, n, k, cfg, bm=p.get("bm", 128), bn=p.get("bn", 128),
+            bk=p.get("bk", 256), dtype_bytes=dtb).modeled_s
+
+    if fam == "dp_scan":
+        rows, cols = spec.shape
+        c = analysis.scan_cost(rows, cols, cfg, block_cols=cols)
+        return math.inf if c is None else c.modeled_s
+
+    if fam == "stencil5":
+        rows, cols = spec.shape
+        br = p.get("block_rows", 8)
+        # row-block stream: a (block_rows, cols) tile is the work item
+        n_model = _round_to(rows * cols, br * cols * cfg.degree
+                            * cfg.vector_width)
+        plan = plan_stream(n_model, cfg, block=br * cols)
+        return analysis.stream_cost(plan, n_loads=3, arith_per_elem=9.0,
+                                    dtype_bytes=dtb).modeled_s
+
+    if fam == "flash_attention":
+        b, h, hkv, s, d = spec.shape
+        # row-block coarsening over query blocks behaves like matmul row
+        # fusion: (s x s) @ (s x d) per (batch, head)
+        c = analysis.matmul_cost(s, d, s, cfg, bm=p.get("bq", 128), bn=d,
+                                 bk=p.get("bkv", 128), dtype_bytes=dtb)
+        return c.modeled_s * b * h
+
+    if fam == "ssd":
+        b, h, g, s, pp, nn = spec.shape
+        chunk = p.get("chunk", 64)
+        # head-coarsening fuses head streams; chunks carry sequentially
+        c = analysis.scan_cost(h, s * (pp + 2 * nn), cfg,
+                               arith_per_elem=3 * chunk + 4 * nn,
+                               block_cols=s * (pp + 2 * nn))
+        return math.inf if c is None else c.modeled_s * b
+
+    if fam == "rglru":
+        b, s, d = spec.shape
+        bd = p.get("block_d", 128)
+        n_model = _round_to(b * s * d, bd * cfg.degree * cfg.vector_width)
+        plan = plan_stream(n_model, cfg, block=bd)
+        return analysis.stream_cost(plan, n_loads=3, arith_per_elem=12.0,
+                                    dtype_bytes=dtb).modeled_s
+
+    raise ValueError(f"unknown tunable family {spec.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# search strategies
+# ---------------------------------------------------------------------------
+
+def search(spec: KernelSpec, *,
+           degrees: Sequence[int] = DEGREES,
+           replications: Sequence[int] = REPLICATIONS,
+           vector_widths: Sequence[int] = VECTOR_WIDTHS,
+           measure: Optional[Callable] = None,
+           strategy: str = "model",
+           top_k: int = 3) -> TuneResult:
+    """Rank all valid candidates for `spec` and return the winner.
+
+    measure(spec, cfg) -> seconds enables the measured strategies:
+      exhaustive — measure every candidate
+      greedy     — measure the model's top_k, rank those by wall time
+    """
+    global SEARCH_COUNT
+    SEARCH_COUNT += 1
+    if strategy not in ("model", "exhaustive", "greedy"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if strategy != "model" and measure is None:
+        raise ValueError(f"strategy {strategy!r} needs a measure callable")
+
+    cfgs = enumerate_candidates(spec, degrees, replications, vector_widths)
+    if not cfgs:
+        raise ValueError(f"no valid coarsening candidate for {spec.key}")
+    cands = [Candidate(cfg, model_cost(spec, cfg)) for cfg in cfgs]
+    cands = [c for c in cands if math.isfinite(c.modeled_s)]
+    cands.sort(key=lambda c: c.modeled_s)
+
+    if strategy == "model":
+        return TuneResult(spec, cands[0].cfg, cands, source="model")
+
+    to_measure = cands if strategy == "exhaustive" else cands[:top_k]
+    measured = [dataclasses.replace(c, measured_s=float(measure(spec, c.cfg)))
+                for c in to_measure]
+    rest = cands[len(to_measure):] if strategy == "greedy" else []
+    measured.sort(key=lambda c: c.measured_s)
+    return TuneResult(spec, measured[0].cfg, measured + rest,
+                      source="measured")
+
+
+def autotune(spec: KernelSpec, *,
+             cache: Optional[TuningCache] = None,
+             measure: Optional[Callable] = None,
+             strategy: str = "model",
+             **search_kw) -> CoarseningConfig:
+    """Cache-through search: return the winning config for `spec`, searching
+    only on a cache miss and persisting the winner."""
+    if cache is None:
+        cache = default_cache()
+    hit = cache.get(spec)
+    if hit is not None:
+        return hit
+    res = search(spec, measure=measure, strategy=strategy, **search_kw)
+    best = res.candidates[0]
+    cache.put(spec, res.best, modeled_s=best.modeled_s,
+              measured_s=best.measured_s, source=res.source)
+    return res.best

@@ -1,0 +1,146 @@
+"""Cache warming for the launch drivers + a wall-clock measurer.
+
+`warm_for_model` derives the kernel shapes a (train or serve) hot loop will
+hit from the ModelConfig and autotunes each family once, so the first real
+step already dispatches the winning coarsening config.  `wall_measurer`
+builds the measured-timing closure for the exhaustive/greedy strategies
+(CPU interpret wall time here; on a real TPU the same closure measures the
+Mosaic-lowered kernel — see ROADMAP Open items).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.tune.cache import KernelSpec, TuningCache, default_cache
+from repro.tune.search import autotune
+
+
+def _round_down(n: int, q: int) -> int:
+    return max(q, (n // q) * q)
+
+
+# strategies the launch drivers accept for their --tune flag; "auto" is an
+# alias for the modeled prior
+TUNE_CHOICES = ("auto", "model", "greedy", "exhaustive")
+
+
+def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
+                   cache: Optional[TuningCache] = None) -> dict:
+    """The launch drivers' --tune entry point: map the flag value to a
+    (strategy, measurer) pair and warm the cache."""
+    if tune not in TUNE_CHOICES:
+        raise ValueError(f"tune must be one of {TUNE_CHOICES}, got {tune!r}")
+    measure = wall_measurer() if tune in ("greedy", "exhaustive") else None
+    strategy = "model" if tune == "auto" else tune
+    return warm_for_model(cfg, seq=seq, batch=batch, cache=cache,
+                          measure=measure, strategy=strategy)
+
+
+def warm_for_model(cfg, *, seq: int, batch: int,
+                   cache: Optional[TuningCache] = None,
+                   measure=None, strategy: str = "model",
+                   verbose: bool = True) -> dict:
+    """Autotune the kernel families a model step exercises; returns
+    {family: winning-label}.  cfg is a repro.models.config.ModelConfig."""
+    cache = cache or default_cache()
+    toks = batch * seq
+    d = cfg.d_model
+    specs = {
+        # elementwise residual/activation streams: toks*d elements
+        "ew_stream": KernelSpec.make(
+            "ew_stream", (_round_down(toks * d, 1024 * 16),),
+            n_loads=2, ai=6, variant="base", block=1024),
+        # embedding lookup: toks ids against the padded vocab table
+        "embed_gather": KernelSpec.make(
+            "embed_gather", (_round_down(toks, 256 * 8), cfg.vocab_padded, d),
+            block=256),
+        # the block matmul (toks, d) @ (d, d_ff)
+        "matmul": KernelSpec.make(
+            "matmul", (_round_down(toks, 128 * 8),
+                       _round_down(cfg.d_ff, 128),
+                       _round_down(d, 256)),
+            dtype="bfloat16", bm=128, bn=128, bk=256),
+    }
+    out = {}
+    for fam, spec in specs.items():
+        try:
+            best = autotune(spec, cache=cache, measure=measure,
+                            strategy=strategy)
+        except ValueError as e:          # geometry too small to coarsen
+            if verbose:
+                print(f"tune: {fam}: skipped ({e})")
+            continue
+        out[fam] = best.label
+        if verbose:
+            print(f"tune: {fam} {spec.shape} -> {best.label}")
+    return out
+
+
+def wall_measurer(reps: int = 3):
+    """measure(spec, cfg) -> seconds by timing the jit'd op on this host.
+
+    Supports the families the benchmark suite measures; interpret-mode wall
+    time on CPU, Mosaic wall time on TPU (same call path).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def measure(spec: KernelSpec, cfg) -> float:
+        from repro.kernels import ops
+        from repro.kernels import gather_stream as gs
+        p = spec.p
+        key = jax.random.PRNGKey(0)
+
+        if spec.family == "ew_stream":
+            n = spec.shape[0]
+            xs = tuple(jax.random.normal(jax.random.fold_in(key, i), (n,))
+                       for i in range(p.get("n_loads", 8)))
+            fn = lambda: ops.ew_stream(xs, cfg, ai=p.get("ai", 6),
+                                       variant=p.get("variant", "base"),
+                                       block=p.get("block", 1024))
+        elif spec.family == "gather_stream":
+            n, table = spec.shape
+            idx = jnp.asarray(gs.make_indices(
+                n, table, int(p.get("window_elems", 8192)), seed=0))
+            tabs = tuple(jax.random.normal(jax.random.fold_in(key, i),
+                                           (table,))
+                         for i in range(p.get("n_loads", 8)))
+            fn = lambda: ops.gather_stream(idx, tabs, cfg,
+                                           ai=p.get("ai", 6),
+                                           block=p.get("block", 1024))
+        elif spec.family == "matmul":
+            m, n, k = spec.shape
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            a = jax.random.normal(key, (m, k), dt)
+            b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dt)
+            fn = lambda: ops.matmul(a, b, cfg, bm=p.get("bm", 128),
+                                    bn=p.get("bn", 128), bk=p.get("bk", 256))
+        elif spec.family == "dp_scan":
+            rows, cols = spec.shape
+            c = jax.random.uniform(key, (rows, cols))
+            fn = lambda: ops.dp_scan(c, cfg)
+        elif spec.family == "stencil5":
+            rows, cols = spec.shape
+            x = jax.random.normal(key, (rows, cols))
+            fn = lambda: ops.stencil5(x, cfg,
+                                      block_rows=p.get("block_rows", 8))
+        elif spec.family == "embed_gather":
+            n_ids, vocab, d = spec.shape
+            ids = jax.random.randint(key, (n_ids,), 0, vocab)
+            table = jax.random.normal(jax.random.fold_in(key, 1), (vocab, d))
+            fn = lambda: ops.embed_gather(ids, table, cfg,
+                                          block=p.get("block", 256))
+        else:
+            raise ValueError(f"wall_measurer: unsupported family "
+                             f"{spec.family!r}")
+
+        jax.block_until_ready(fn())          # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    return measure

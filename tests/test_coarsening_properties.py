@@ -1,10 +1,11 @@
 """Hypothesis property tests for the coarsening framework's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import (CoarseningConfig, plan_stream, KIND_CONSECUTIVE,

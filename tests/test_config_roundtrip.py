@@ -1,0 +1,104 @@
+"""CoarseningConfig.parse round-trips and plan_stream/plan_rows invariants
+(pure unit tests — no hypothesis dependency, unlike the property suite)."""
+import pytest
+
+from repro.core import (CoarseningConfig, plan_stream, KIND_NONE,
+                        KIND_CONSECUTIVE, KIND_GAPPED)
+from repro.core.coarsening import plan_rows, row_starts
+
+
+# ---------------------------------------------------------------------------
+# parse <-> label round-trip
+# ---------------------------------------------------------------------------
+
+ALL_CFGS = [
+    CoarseningConfig(kind, degree, repl, vw)
+    for kind in (KIND_NONE, KIND_CONSECUTIVE, KIND_GAPPED)
+    for degree in ((1,) if kind == KIND_NONE else (2, 4, 8))
+    for repl in (1, 2, 4)
+    for vw in (1, 2)
+]
+
+
+@pytest.mark.parametrize("cfg", ALL_CFGS, ids=lambda c: c.label)
+def test_parse_label_roundtrip(cfg):
+    assert CoarseningConfig.parse(cfg.label) == cfg
+
+
+@pytest.mark.parametrize("spec,want", [
+    ("none", CoarseningConfig()),
+    ("base", CoarseningConfig()),
+    ("con4", CoarseningConfig(KIND_CONSECUTIVE, 4)),
+    ("gap8", CoarseningConfig(KIND_GAPPED, 8)),
+    ("consecutive:4", CoarseningConfig(KIND_CONSECUTIVE, 4)),
+    ("gapped:2", CoarseningConfig(KIND_GAPPED, 2)),
+    ("con4+pipe2", CoarseningConfig(KIND_CONSECUTIVE, 4, 2, 1)),
+    ("con4+pipe2+simd2", CoarseningConfig(KIND_CONSECUTIVE, 4, 2, 2)),
+    ("gap2,pipe4", CoarseningConfig(KIND_GAPPED, 2, 4, 1)),
+    ("pipe2+simd4", CoarseningConfig(KIND_NONE, 1, 2, 4)),
+])
+def test_parse_spellings(spec, want):
+    assert CoarseningConfig.parse(spec) == want
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        CoarseningConfig.parse("warp4")
+
+
+def test_degree1_normalises_to_none():
+    assert CoarseningConfig(KIND_CONSECUTIVE, 1).kind == KIND_NONE
+    assert CoarseningConfig(KIND_NONE, 7).degree == 1
+
+
+# ---------------------------------------------------------------------------
+# plan_stream invariants
+# ---------------------------------------------------------------------------
+
+PLAN_CASES = [
+    (1 << 16, "none", 1024), (1 << 16, "con4", 1024), (1 << 16, "gap4", 1024),
+    (1 << 16, "con8", 512), (1 << 16, "gap8", 512),
+    (1 << 16, "con2+simd2", 1024), (1 << 16, "gap2+simd2", 1024),
+    (1 << 14, "con4+pipe2", 256), (3 << 12, "con2", 512),
+]
+
+
+@pytest.mark.parametrize("n,spec,block", PLAN_CASES,
+                         ids=[f"{s}-b{b}" for _, s, b in PLAN_CASES])
+def test_plan_stream_invariants(n, spec, block):
+    cfg = CoarseningConfig.parse(spec)
+    plan = plan_stream(n, cfg, block=block)
+    # every element is covered exactly once
+    assert plan.grid * cfg.degree * plan.block == n
+    # the DMA descriptors per operand cover exactly one program's tile
+    assert plan.dmas_per_operand * plan.dma_elems == cfg.degree * plan.block
+    # SIMD widens the effective block
+    assert plan.block == block * cfg.vector_width
+    # view/block shapes agree with the kind's distribution
+    assert plan.view_shape[plan.block_shape.index(1)] == plan.grid
+    assert plan.contiguous == (cfg.kind != KIND_GAPPED)
+    assert plan.dmas_per_operand == (1 if plan.contiguous else cfg.degree)
+
+
+def test_plan_stream_rejects_indivisible():
+    with pytest.raises(ValueError):
+        plan_stream(1000, CoarseningConfig.parse("con4"), block=1024)
+    with pytest.raises(ValueError):
+        plan_stream(1 << 12, CoarseningConfig.parse("simd2"), block=1 << 12)
+
+
+# ---------------------------------------------------------------------------
+# plan_rows invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["none", "con2", "con4", "gap2", "gap4"])
+def test_plan_rows_partitions_rows(spec):
+    rows, block_rows = 256, 8
+    cfg = CoarseningConfig.parse(spec)
+    plan = plan_rows(rows, cfg, block_rows)
+    assert plan.grid * plan.fused_rows == rows
+    assert plan.dmas_per_operand == (1 if plan.contiguous else cfg.degree)
+    # the per-program start blocks tile [0, rows/block_rows) exactly once
+    seen = sorted(s for i in range(plan.grid)
+                  for s in row_starts(plan, i))
+    assert seen == list(range(rows // block_rows))

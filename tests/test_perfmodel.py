@@ -1,6 +1,8 @@
 """Property tests on the analytic perf model (the §Roofline source)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import ARCHS, get_config

@@ -16,6 +16,15 @@ from repro.core.perfmodel import MeshInfo, train_step_terms, decode_step_terms
 from repro.configs import get_config
 
 
+def _cost_props(compiled):
+    """compiled.cost_analysis() returns a dict in jax>=0.4.27 but a
+    one-element list of dicts on older jaxlibs — normalise to the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca
+
+
 # ---------------------------------------------------------------------------
 # collective-bytes HLO parser
 # ---------------------------------------------------------------------------
@@ -69,8 +78,8 @@ def test_cost_analysis_counts_while_once():
 
     w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
     x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
-    fs = jax.jit(f_scan).lower(w, x).compile().cost_analysis()["flops"]
-    fu = jax.jit(f_unroll).lower(w, x).compile().cost_analysis()["flops"]
+    fs = _cost_props(jax.jit(f_scan).lower(w, x).compile())["flops"]
+    fu = _cost_props(jax.jit(f_unroll).lower(w, x).compile())["flops"]
     assert fu == pytest.approx(8 * fs, rel=0.01)
 
 
@@ -107,7 +116,7 @@ def test_perfmodel_matmul_flops_match_hlo():
     tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
     p_abs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
                          params)
-    ca = jax.jit(fwd).lower(p_abs, tok).compile().cost_analysis()
+    ca = _cost_props(jax.jit(fwd).lower(p_abs, tok).compile())
     hlo_flops = ca["flops"]
 
     # analytic forward matmul+attention flops (train terms / bwd_mult, tp=1)
