@@ -1,0 +1,85 @@
+"""Decode-attention table: dense full-length einsum baseline vs the
+coarsened split-KV kernel at fixed degrees vs AUTO, across cache lengths.
+
+For each cache length S in 128..4k (decode pos at the end of the cache —
+the hardest case for the split kernel, since length-awareness saves
+nothing) emit:
+
+  dense          the unfused XLA einsum path: full-length scan + f32
+                 logits/probability HBM round-trips (models/layers.py)
+  con1/2/4/8     the split-KV kernel, kv-block coarsening at fixed degrees
+  AUTO           the repro.tune pick over the full candidate space
+
+`derived` is the modeled v5e time (core/analysis.decode_attention_cost);
+`us_per_call` is CPU interpret wall time at a reduced geometry (transparency
+only).  The acceptance bar: every coarsened row beats dense at S >= 512 and
+AUTO matches or beats every fixed degree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoarseningConfig
+from repro.core.analysis import decode_attention_cost
+from repro.kernels import ops
+from repro.tune import KernelSpec, search
+from benchmarks.common import wall_us, emit
+
+# modeled (paper-scale) geometry
+B, HKV, G, D, BKV = 8, 8, 4, 128, 128
+H = HKV * G
+# measured (CPU interpret) geometry
+MB, MHKV, MG, MD, MBKV = 2, 2, 2, 32, 64
+MH = MHKV * MG
+LENGTHS = (128, 256, 512, 1024, 2048, 4096)
+DEGREES = (1, 2, 4, 8)
+
+
+def _measured_fn(s, cfg):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (MB, 1, MH, MD), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1),
+                           (MB, s, MHKV, MD), jnp.float32)
+    vc = jax.random.normal(jax.random.fold_in(key, 2),
+                           (MB, s, MHKV, MD), jnp.float32)
+    pos = jnp.full((MB,), s - 1, jnp.int32)
+    if cfg is None:
+        from repro.kernels import ref
+        return wall_us(lambda: ref.decode_attention(q, kc, vc, pos))
+    if s % (MBKV * cfg.degree):
+        return -1.0
+    return wall_us(lambda: ops.decode_attention(q, kc, vc, pos, cfg,
+                                                bkv=MBKV))
+
+
+def main() -> None:
+    for s in LENGTHS:
+        pos = s - 1
+        dense = decode_attention_cost(B, H, HKV, s, D, CoarseningConfig(),
+                                      bkv=BKV, dense=True)
+        emit(f"decode,S{s},dense",
+             _measured_fn(s, None) if s <= 1024 else -1.0,
+             dense.modeled_s * 1e6, speedup=1.0)
+        for deg in DEGREES:
+            if s % (BKV * deg):
+                emit(f"decode,S{s},con{deg}", -1, -1, status="NA")
+                continue
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            c = decode_attention_cost(B, H, HKV, s, D, cfg, bkv=BKV,
+                                      kv_len=pos + 1)
+            emit(f"decode,S{s},con{deg}",
+                 _measured_fn(s, cfg) if s <= 1024 else -1.0,
+                 c.modeled_s * 1e6,
+                 speedup=round(dense.modeled_s / c.modeled_s, 2))
+        spec = KernelSpec.make("decode_attention", (B, H, HKV, s, D),
+                               dtype="bfloat16", bkv=BKV, window=0)
+        best = search(spec).best
+        c = decode_attention_cost(B, H, HKV, s, D, best, bkv=BKV,
+                                  kv_len=pos + 1)
+        emit(f"decode,S{s},AUTO[{best.label}]", -1.0, c.modeled_s * 1e6,
+             speedup=round(dense.modeled_s / c.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,11 @@ Tables (one per paper figure):
   coll   — beyond-paper: collective bucket-coarsening
   roofline — §Roofline per (arch x shape), analytic terms
   tuned  — autotuner pick vs base vs the paper's fixed degrees
+  decode — dense einsum baseline vs coarsened split-KV decode attention
+
+--json additionally writes each selected table's rows to
+experiments/BENCH_<name>.json as an append-only trajectory artifact, so
+later PRs can track (e.g.) serving perf across the stack's history.
 """
 import argparse
 import json
@@ -22,7 +27,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline, tuned)
+                        roofline, tuned, decode)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -34,22 +39,49 @@ TABLES = {
     "coll": collectives_coarsening.main,
     "roofline": roofline.main,
     "tuned": tuned.main,
+    "decode": decode.main,
 }
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _append_trajectory(name: str, rows: list) -> str:
+    """Append this run's rows for one table to its BENCH_<name>.json
+    trajectory file (a list of runs, newest last)."""
+    path = os.path.join(EXPERIMENTS, f"BENCH_{name}.json")
+    runs = []
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if isinstance(prev, list):
+            runs = prev
+    except (OSError, ValueError):
+        pass
+    runs.append({"run": len(runs), "rows": rows})
+    os.makedirs(EXPERIMENTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(runs, f, indent=1)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated table subset")
+    ap.add_argument("--json", action="store_true",
+                    help="write per-table BENCH_<name>.json trajectories")
     args, _ = ap.parse_known_args()
     names = args.only.split(",") if args.only else list(TABLES)
     print("name,us_per_call,derived")
     for name in names:
         print(f"# --- {name} ---")
+        start = len(ROWS)
         TABLES[name]()
-    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                       "bench_rows.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+        if args.json:
+            path = _append_trajectory(name, ROWS[start:])
+            print(f"# appended {len(ROWS) - start} rows to {path}")
+    out = os.path.join(EXPERIMENTS, "bench_rows.json")
+    os.makedirs(EXPERIMENTS, exist_ok=True)
     with open(out, "w") as f:
         json.dump(ROWS, f, indent=1)
     print(f"# wrote {len(ROWS)} rows")

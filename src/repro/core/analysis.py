@@ -233,6 +233,61 @@ def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
     )
 
 
+def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
+                          cfg: CoarseningConfig, *, bkv: int = 128,
+                          kv_len: int | None = None, dtype_bytes: int = 2,
+                          dense: bool = False) -> KernelCost:
+    """Split-KV decode attention (one query token vs a (S, Hkv, D) cache).
+
+    The work-item axis is the kv-block axis: the grid walks
+    b x hkv x kv/(C*bkv) programs; each owns C kv blocks (consecutive = one
+    wide DMA per operand, gapped = C strided DMAs — the LSU analogs) and
+    reduces them to a partial (m, l, acc) that a cheap combine pass merges.
+    The grid is length-aware: only blocks covering the live prefix
+    ``kv_len`` are walked, not the allocated ``s``.
+
+    dense=True models the unfused XLA einsum baseline at the SAME tiling
+    granularity (XLA streams the cache in MXU-sized panes too): it scans
+    the full allocated length regardless of kv_len, and pays f32 HBM
+    round-trips for the (H, S) logits and probabilities between the QK
+    einsum, the softmax, and the PV einsum — traffic the fused online-
+    softmax kernel never emits.
+    """
+    g = h // hkv
+    c = 1 if dense else cfg.degree
+    kv = s if (dense or kv_len is None) \
+        else min(s, max(c * bkv, -(-kv_len // (c * bkv)) * c * bkv))
+    n_splits = max(1, kv // (c * bkv))
+    grid = b * hkv * n_splits
+
+    descs = c if (not dense and cfg.kind == KIND_GAPPED) else 1
+    bytes_per_desc = c * bkv * d * dtype_bytes / descs
+    dma_s = 2 * _dma_time(bytes_per_desc, descs)          # K + V panes
+    flops = 4.0 * g * c * bkv * d + 6.0 * g * c * bkv     # qk + pv + softmax
+    compute_s = flops / VPU_FLOPS_F32
+
+    step = max(dma_s, compute_s)
+    total = (dma_s + compute_s) + step * max(0, grid - 1)
+
+    if dense:
+        # logits (write+read) and probabilities (write+read) in f32
+        logit_bytes = 2.0 * b * h * kv * 4
+        total += 2 * _dma_time(logit_bytes, 2)
+    else:
+        # combine pass: per-split (m, l, acc) partials written then re-read
+        part_bytes = b * hkv * g * n_splits * (2 + d) * 4
+        total += 2 * _dma_time(part_bytes, 2)
+
+    vmem = 2 * (2 * c * bkv * d * dtype_bytes + g * d * 4 + g * (2 + d) * 4)
+    return KernelCost(
+        label="dense" if dense else cfg.label, grid=grid,
+        dmas_per_step=2 * descs, dma_bytes=bytes_per_desc,
+        vmem_bytes=vmem, dma_sems=2 * descs,
+        dma_s_per_step=dma_s, compute_s_per_step=compute_s, modeled_s=total,
+        bound="memory" if dma_s >= compute_s else "compute",
+    )
+
+
 def scan_cost(rows: int, cols: int, cfg: CoarseningConfig, *,
               arith_per_elem: float = 4.0, dtype_bytes: int = 4,
               block_cols: int = 1024,

@@ -1,0 +1,165 @@
+"""Split-KV decode attention with kv-block coarsening (flash-decode style).
+
+Decode attention — one query token per sequence against a (S, Hkv, D) cache —
+is the serving hot path: every generated token must stream the live cache
+prefix.  The coarsenable work-item axis here is the KV-BLOCK axis: each
+program owns C kv blocks of ``bkv`` rows,
+
+  consecutive : C adjacent blocks -> one (C*bkv, D) cache DMA per operand
+                per program (the wide burst-coalesced LSU, paper Fig. 4 top)
+  gapped      : C blocks strided S/C apart -> C strided DMAs per operand
+                (the C narrow cached LSUs, paper Fig. 4 bottom)
+
+and reduces them into a partial online-softmax state ``(m, l, acc)``.  A
+cheap exact combine outside the kernel merges the per-split partials
+(split-KV / flash-decode).  The grid is LENGTH-AWARE: a program whose fused
+kv rows all lie beyond the slot's ``pos`` (or entirely left of its sliding
+window) skips its compute, so per-token cost tracks the live prefix
+``pos+1`` rather than the allocated ``max_len`` — coarsening then divides
+the remaining per-block DMA issue overhead by C (paper §III.B: fewer total
+memory accesses at bounded resource cost).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+NEG = -1e30
+
+
+def _combine(m, l, acc):
+    """Merge per-split partial softmax states exactly.
+
+    m, l: (B, Hkv, G, n_splits); acc: (B, Hkv, G, n_splits, D).
+    """
+    m_max = m.max(axis=-1)
+    w = jnp.exp(m - m_max[..., None])
+    w = jnp.where(m <= NEG * 0.5, 0.0, w)           # dead splits contribute 0
+    l_tot = (l * w).sum(axis=-1)
+    out = (acc * w[..., None]).sum(axis=-2)
+    l_tot = jnp.where(l_tot == 0.0, 1.0, l_tot)
+    return out / l_tot[..., None]
+
+
+def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
+                cfg: CoarseningConfig, *, bkv: int = 128,
+                window: int | None = None, scale: float | None = None,
+                interpret: bool = True) -> Callable:
+    """Build the split-KV decode kernel.
+
+    Returned callable: run(q (B,1,H,D), k_cache, v_cache (B,S,Hkv,D),
+    pos (B,) int32) -> (B,1,H,D).
+    """
+    c = cfg.degree
+    if s % (c * bkv):
+        raise ValueError(f"cache len {s} not tileable by degree*bkv={c * bkv}")
+    gapped = cfg.kind == KIND_GAPPED
+    g = h // hkv
+    if g * hkv != h:
+        raise ValueError(f"n_heads {h} not divisible by n_kv_heads {hkv}")
+    n_splits = s // (c * bkv)
+    sg = s // c                          # gapped segment length (rows)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    def body(pos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref):
+        si = pl.program_id(2)
+        pos = pos_ref[0, 0]
+
+        # fused kv row extent for the length-aware skip
+        if gapped:
+            first_row = si * bkv
+            last_row = (c - 1) * sg + si * bkv + bkv - 1
+        else:
+            first_row = si * c * bkv
+            last_row = si * c * bkv + c * bkv - 1
+        live = first_row <= pos
+        if window is not None:
+            live &= last_row > pos - window
+
+        @pl.when(live)
+        def _compute():
+            q = q_ref[...].reshape(g, d).astype(jnp.float32)
+            kk = k_ref[...].reshape(c * bkv, d)
+            vv = v_ref[...].reshape(c * bkv, d)
+            m = jnp.full((g,), NEG, jnp.float32)
+            l = jnp.zeros((g,), jnp.float32)
+            acc = jnp.zeros((g, d), jnp.float32)
+            cols0 = jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+            for j in range(c):          # unrolled: C fused kv blocks
+                start = (j * sg + si * bkv) if gapped else (si * c * bkv
+                                                            + j * bkv)
+                cols = cols0 + start
+                mask = cols <= pos
+                if window is not None:
+                    mask &= cols > pos - window
+                kj = kk[j * bkv:(j + 1) * bkv].astype(jnp.float32)
+                vj = vv[j * bkv:(j + 1) * bkv].astype(jnp.float32)
+                sij = jnp.dot(q, kj.T,
+                              preferred_element_type=jnp.float32) * scale
+                sij = jnp.where(mask, sij, NEG)
+                m_new = jnp.maximum(m, sij.max(axis=1))
+                p = jnp.exp(sij - m_new[:, None]) * mask
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + p.sum(axis=1)
+                acc = acc * alpha[:, None] + jnp.dot(
+                    p, vj, preferred_element_type=jnp.float32)
+                m = m_new
+            m_ref[...] = m.reshape(m_ref.shape)
+            l_ref[...] = l.reshape(l_ref.shape)
+            acc_ref[...] = acc.reshape(acc_ref.shape)
+
+        @pl.when(jnp.logical_not(live))
+        def _dead():
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # K/V cache views: consecutive fetches one contiguous (c*bkv, d) pane;
+    # gapped views the row axis as (C, S/C) and fetches C strided panes.
+    if gapped:
+        kv_spec = pl.BlockSpec((1, c, bkv, 1, d),
+                               lambda bb, hh, si: (bb, 0, si, hh, 0))
+        kv_view = lambda x: x.reshape(b, c, sg, hkv, d)
+    else:
+        kv_spec = pl.BlockSpec((1, c * bkv, 1, d),
+                               lambda bb, hh, si: (bb, si, hh, 0))
+        kv_view = lambda x: x
+
+    call = pl.pallas_call(
+        body,
+        grid=(b, hkv, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, hh, si: (bb, 0)),          # pos
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, g, 1, d),
+                         lambda bb, hh, si: (bb, hh, 0, si, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )
+
+    def run(q, k_cache, v_cache, pos):
+        qv = q.reshape(b, hkv, g, d)
+        pos2 = pos.reshape(b, 1).astype(jnp.int32)
+        m, l, acc = call(pos2, qv, kv_view(k_cache), kv_view(v_cache))
+        out = _combine(m, l, acc)                     # (B, Hkv, G, D)
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    return run

@@ -25,6 +25,7 @@ from repro.kernels import (
     stencil as _stencil,
     chunk_scan as _scan,
     flash_attention as _flash,
+    decode_attention as _decode,
     ssd as _ssd,
     rglru as _rglru,
     ref,
@@ -142,6 +143,30 @@ def flash_attention(q, k, v, cfg: CoarseningConfig | str = BASE, *,
     cfg = resolve_cfg(cfg, "flash_attention", (b, h, hkv, s, d),
                       dtype=q.dtype.name, backend=backend, bq=bq, bkv=bkv)
     return _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend)(q, k, v)
+
+
+@functools.lru_cache(maxsize=256)
+def _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale, backend):
+    if backend == "ref":
+        return jax.jit(functools.partial(ref.decode_attention, window=window,
+                                         scale=scale))
+    return jax.jit(_decode.make_kernel(b, h, hkv, s, d, cfg, bkv=bkv,
+                                       window=window, scale=scale))
+
+
+def decode_attention(q, k_cache, v_cache, pos, cfg: CoarseningConfig | str = BASE,
+                     *, bkv: int = 128, window: int | None = None,
+                     scale: float | None = None, backend: str = "pallas"):
+    """Split-KV decode attention.  q: (B,1,H,D); caches: (B,S,Hkv,D);
+    pos: (B,) int32 -> (B,1,H,D).  The coarsening axis is the kv-block
+    axis (each program owns cfg.degree kv blocks of bkv rows)."""
+    b, _, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    cfg = resolve_cfg(cfg, "decode_attention", (b, h, hkv, s, d),
+                      dtype=k_cache.dtype.name, backend=backend, bkv=bkv,
+                      window=window or 0)
+    return _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale,
+                      backend)(q, k_cache, v_cache, pos)
 
 
 @functools.lru_cache(maxsize=256)

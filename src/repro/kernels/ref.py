@@ -96,6 +96,31 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
 
 
+# --- decode attention ---------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Dense full-length decode-attention oracle (same math as the XLA model
+    path in models/layers.py).  q: (B,1,H,D); caches: (B,S,Hkv,D);
+    pos: (B,) int32."""
+    b, _, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    mask = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        mask = mask & (kpos[None, :] > pos[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
 # --- Mamba-2 SSD --------------------------------------------------------------
 
 def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
@@ -126,11 +151,15 @@ def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
 
 
 def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
-                C: jax.Array, chunk: int = 64) -> jax.Array:
+                C: jax.Array, chunk: int = 64,
+                state0: jax.Array | None = None,
+                return_state: bool = False):
     """Linear-time chunked SSD (the model/XLA path; same math as `ssd`).
 
     Layouts as `ssd`: x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n).
     lax.scan over chunks carrying the (h,n,p) state — O(S*c) not O(S^2).
+    state0: optional (b,h,n,p) initial state (chunked prefill continuation);
+    return_state=True additionally returns the final state.
     """
     b, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
@@ -165,9 +194,11 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
         state = jnp.exp(total)[..., None, None] * state + upd
         return state, y
 
-    state0 = jnp.zeros((b, h, n, p), x.dtype)
-    _, ys = jax.lax.scan(step, state0, (xs, dts, Bh, Ch))
-    return ys.swapaxes(0, 1).reshape(b, s, h, p)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), x.dtype)
+    state, ys = jax.lax.scan(step, state0.astype(x.dtype), (xs, dts, Bh, Ch))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return (y, state) if return_state else y
 
 
 # --- RG-LRU (RecurrentGemma) --------------------------------------------------
@@ -182,6 +213,17 @@ def rglru(x: jax.Array, r: jax.Array, i: jax.Array,
     x,r,i: (b,s,d) (r,i are pre-sigmoid gates), a_param: (d,) pre-softplus.
     a_t = exp(-c * softplus(a_param) * sigmoid(r_t)).
     """
+    hs, _ = rglru_with_state(x, r, i, a_param, None)
+    return hs
+
+
+def rglru_with_state(x: jax.Array, r: jax.Array, i: jax.Array,
+                     a_param: jax.Array, h0: jax.Array | None):
+    """`rglru` with an explicit initial state — the chunked-prefill form.
+
+    h0: (b,d) f32 hidden state (None -> zeros).  Returns (hs, h_final) so a
+    later chunk (or the per-token decode step) can continue the recurrence.
+    """
     rg = jax.nn.sigmoid(r)
     ig = jax.nn.sigmoid(i)
     log_a = -RGLRU_C * jax.nn.softplus(a_param)[None, None, :] * rg  # (b,s,d)
@@ -194,7 +236,8 @@ def rglru(x: jax.Array, r: jax.Array, i: jax.Array,
         h = a_t * h + m_t * gx_t
         return h, h
     b, s, d = x.shape
-    init = jnp.zeros((b, d), dtype=jnp.float32)
+    init = jnp.zeros((b, d), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
     xs = (a.swapaxes(0, 1), gated.swapaxes(0, 1), mult.swapaxes(0, 1))
-    _, hs = jax.lax.scan(step, init, xs)
-    return hs.swapaxes(0, 1)
+    h_final, hs = jax.lax.scan(step, init, xs)
+    return hs.swapaxes(0, 1), h_final

@@ -1,15 +1,23 @@
-"""Batched serving driver: fixed-slot continuous batching over the decode
-step.  Prompts are ingested token-by-token through the same decode step
-(prefill = forced decode), finished sequences free their slot for the next
-request — the minimal form of continuous batching that exercises cache
-management, slot scheduling and batched sampling.
+"""Batched serving driver: fixed-slot continuous batching with CHUNKED
+PREFILL and on-device decode blocks.
+
+Admission runs the prompt through `lm_prefill` in seq-chunks — each chunk is
+one batched model step that fills the admitted slot's K/V + recurrent caches
+(other slots' caches are mask-protected) — so a request costs
+``ceil(prompt_len/chunk) + gen_tokens`` model steps instead of
+``prompt_len + gen_tokens``.  Decode then runs up to ``decode_block`` steps
+fully on-device (a jitted lax.scan over `lm_decode_step` with in-loop
+sampling) between host syncs.  Decode attention dispatches to the coarsened
+split-KV kernel when the model config selects ``decode_backend='pallas'``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --slots 4 --requests 8 --gen-tokens 16
+      --slots 4 --requests 8 --prompt-len 32 --chunk 16 --gen-tokens 16
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import time
 
 import jax
@@ -21,79 +29,152 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slot_reset(cache, slot):
+    """Zero one slot's rows across every cache leaf in a single jitted
+    scatter (stacked block leaves carry batch on axis 1, tail on axis 0) —
+    no whole-tree re-materialization per admission."""
+    return {
+        "blocks": [jax.tree.map(lambda a: a.at[:, slot].set(0.0), c)
+                   for c in cache["blocks"]],
+        "tail": [jax.tree.map(lambda a: a.at[slot].set(0.0), c)
+                 for c in cache["tail"]],
+    }
+
+
 class BatchedServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
+                 chunk: int = 16, decode_block: int = 1,
                  temperature: float = 0.0, seed: int = 0,
-                 tune: str | None = None):
+                 tune: str | None = None, decode_backend: str | None = None):
+        if decode_backend is not None:
+            cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
         if tune:
-            # pre-tune the ops-level kernel families at prompt-ingest scale
-            # (slots x max_len tokens — the largest geometry this server
-            # touches; per-token decode shapes are below the coarsenable
-            # minimum and dispatch uncoarsened)
+            # pre-tune the kernel families this server's hot loops hit: the
+            # ops-level streams at prompt-ingest scale plus the split-KV
+            # decode-attention family at the allocated cache length
             from repro.tune import warm_from_flag
             warm_from_flag(cfg, tune, seq=max_len, batch=slots)
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        self.chunk, self.decode_block = chunk, decode_block
         self.temperature = temperature
         self.cache = M.lm_init_cache(cfg, slots, max_len,
                                      enc_len=min(max_len, 64))
         self.pos = np.zeros((slots,), np.int32)
         self.active = np.zeros((slots,), bool)
-        self.queues: list[list[int]] = [[] for _ in range(slots)]  # to ingest
         self.outputs: list[list[int]] = [[] for _ in range(slots)]
         self.completed: list[list[int]] = []   # archived finished sequences
         self.budget = np.zeros((slots,), np.int32)
         self.key = jax.random.PRNGKey(seed)
-        self._step = jax.jit(
-            lambda p, c, t, po: M.lm_decode_step(p, c, t, po, cfg))
+        # perf accounting (prefill and decode reported separately)
+        self.prefill_steps = self.decode_steps = 0
+        self.prefill_tokens = self.decoded_tokens = 0
+        self.prefill_s = self.decode_s = 0.0
+        self._prefill = jax.jit(
+            lambda p, c, t, po, m: M.lm_prefill(p, {"tokens": t}, cfg,
+                                                cache=c, pos0=po, mask=m))
+        self._decode_fns: dict[int, callable] = {}
+
+    # -- decode: n steps on-device between host syncs -----------------------
+
+    def _decode_fn(self, n: int):
+        fn = self._decode_fns.get(n)
+        if fn is not None:
+            return fn
+        cfg, temp = self.cfg, self.temperature
+
+        def run(params, cache, tok, pos, key):
+            def body(carry, i):
+                tok, pos, cache = carry
+                logits, cache = M.lm_decode_step(params, cache, tok, pos, cfg)
+                if temp > 0:
+                    nxt = jax.random.categorical(jax.random.fold_in(key, i),
+                                                 logits / temp, -1)
+                else:
+                    nxt = jnp.argmax(logits, -1)
+                nxt = nxt.astype(jnp.int32)
+                return (nxt[:, None], pos + 1, cache), nxt
+
+            (_, _, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), jnp.arange(n))
+            return toks.T, cache                       # (slots, n)
+
+        fn = self._decode_fns[n] = jax.jit(run)
+        return fn
+
+    # -- admission: chunked prefill -----------------------------------------
 
     def try_admit(self, prompt: list[int], gen_tokens: int) -> bool:
-        for s in range(self.slots):
-            if not self.active[s]:
-                self.active[s] = True
-                self.pos[s] = 0
-                self.queues[s] = list(prompt)
-                self.outputs[s] = []
-                self.budget[s] = gen_tokens
-                # fresh cache rows for the slot
-                self.cache = jax.tree.map(
-                    lambda a: a.at[:, s].set(0.0) if a.ndim >= 2 else a,
-                    self.cache)
-                return True
-        return False
+        free = [s for s in range(self.slots) if not self.active[s]]
+        if not free:
+            return False
+        s = free[0]
+        # same cap as per-token ingestion hitting pos >= max_len-1: the cache
+        # holds max_len-1 prompt rows + the decode row; never scatter past it
+        prompt = prompt[: self.max_len - 1]
+        t0 = time.perf_counter()
+        self.cache = _slot_reset(self.cache, jnp.asarray(s, jnp.int32))
+        mask = jnp.zeros((self.slots,), bool).at[s].set(True)
+        logits = None
+        for i in range(0, len(prompt), self.chunk):
+            piece = prompt[i:i + self.chunk]
+            tokens = np.zeros((self.slots, len(piece)), np.int32)
+            tokens[s] = piece
+            pos0 = jnp.asarray(self.pos, jnp.int32).at[s].set(i)
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(tokens), pos0, mask)
+            self.prefill_steps += 1
+        jax.block_until_ready(logits)
+        self.prefill_s += time.perf_counter() - t0
+        self.prefill_tokens += len(prompt)
 
-    def step(self) -> None:
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for s in range(self.slots):
-            if not self.active[s]:
-                continue
-            if self.queues[s]:
-                tokens[s, 0] = self.queues[s][0]
-            elif self.outputs[s]:
-                tokens[s, 0] = self.outputs[s][-1]
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(tokens),
-                                        jnp.asarray(self.pos))
         if self.temperature > 0:
             self.key, sub = jax.random.split(self.key)
-            nxt = jax.random.categorical(sub, logits / self.temperature, -1)
+            first = int(jax.random.categorical(
+                sub, logits[s] / self.temperature))
         else:
-            nxt = jnp.argmax(logits, -1)
-        nxt = np.asarray(nxt)
-        for s in range(self.slots):
-            if not self.active[s]:
-                continue
-            if self.queues[s]:
-                self.queues[s].pop(0)          # still ingesting the prompt
-                if not self.queues[s]:
-                    self.outputs[s].append(int(nxt[s]))  # first generated tok
-            else:
-                self.outputs[s].append(int(nxt[s]))
-            self.pos[s] += 1
-            if (not self.queues[s] and len(self.outputs[s]) >= self.budget[s]) \
-                    or self.pos[s] >= self.max_len - 1:
-                self.active[s] = False
-                self.completed.append(list(self.outputs[s]))
+            first = int(jnp.argmax(logits[s]))
+        self.active[s] = True
+        self.pos[s] = len(prompt)
+        self.outputs[s] = [first]
+        self.budget[s] = gen_tokens
+        self._maybe_finish(s)
+        return True
+
+    # -- decode step(s) ------------------------------------------------------
+
+    def step(self) -> None:
+        if not self.active.any():
+            return
+        act = np.flatnonzero(self.active)
+        remaining = int(min(self.budget[s] - len(self.outputs[s])
+                            for s in act))
+        headroom = int(self.max_len - 1 - self.pos[act].max())
+        n = max(1, min(self.decode_block, remaining, headroom))
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s in act:
+            tokens[s, 0] = self.outputs[s][-1]
+        self.key, sub = jax.random.split(self.key)
+        t0 = time.perf_counter()
+        toks, self.cache = self._decode_fn(n)(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos), sub)
+        toks = np.asarray(toks)
+        self.decode_s += time.perf_counter() - t0
+        self.decode_steps += n
+        for s in act:
+            take = min(n, int(self.budget[s]) - len(self.outputs[s]))
+            self.outputs[s].extend(int(v) for v in toks[s, :take])
+            self.decoded_tokens += take
+            self.pos[s] += n
+            self._maybe_finish(s)
+
+    def _maybe_finish(self, s: int) -> None:
+        if len(self.outputs[s]) >= self.budget[s] \
+                or self.pos[s] >= self.max_len - 1:
+            self.active[s] = False
+            self.completed.append(list(self.outputs[s]))
 
     @property
     def any_active(self) -> bool:
@@ -109,6 +190,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk: prompt tokens per batched step")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode steps run on-device between host syncs")
+    ap.add_argument("--decode-backend", default=None,
+                    choices=[None, "ref", "pallas"],
+                    help="decode attention path (pallas = split-KV kernel)")
     from repro.tune import TUNE_CHOICES
     ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
                     help="warm the coarsening tuning cache before serving")
@@ -119,27 +207,32 @@ def main():
         cfg = cfg.reduced()
     params = M.lm_init(jax.random.PRNGKey(0), cfg)
     server = BatchedServer(cfg, params, slots=args.slots,
-                           max_len=args.max_len, tune=args.tune)
+                           max_len=args.max_len, chunk=args.chunk,
+                           decode_block=args.decode_block, tune=args.tune,
+                           decode_backend=args.decode_backend)
 
     rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))
                for _ in range(args.requests)]
-    done, t0, steps = 0, time.perf_counter(), 0
+    t0 = time.perf_counter()
     while pending or server.any_active:
         while pending and server.try_admit(pending[0], args.gen_tokens):
             pending.pop(0)
         if not server.any_active:
             break
         server.step()
-        steps += 1
-        newly = sum(1 for s in range(server.slots)
-                    if not server.active[s] and server.outputs[s])
     dt = time.perf_counter() - t0
     total_tokens = args.requests * (args.prompt_len + args.gen_tokens)
     print(f"served {args.requests} requests / {total_tokens} tokens in "
-          f"{steps} batched steps, {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s on CPU interpret-scale)")
-    print("sample output:", server.outputs[0][:8])
+          f"{server.prefill_steps} prefill + {server.decode_steps} decode "
+          f"model steps, {dt:.2f}s")
+    print(f"prefill: {server.prefill_tokens} tok in {server.prefill_s:.2f}s "
+          f"({server.prefill_tokens / max(server.prefill_s, 1e-9):.1f} tok/s)"
+          f" | decode: {server.decoded_tokens} tok in {server.decode_s:.2f}s "
+          f"({server.decoded_tokens / max(server.decode_s, 1e-9):.1f} tok/s)"
+          f" (CPU interpret-scale)")
+    print("sample output:", server.completed[0][:8] if server.completed
+          else server.outputs[0][:8])
 
 
 if __name__ == "__main__":

@@ -67,13 +67,47 @@ def attn_block_decode(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
     k_upd, v_upd = jax.lax.optimization_barrier((k[:, 0], v[:, 0]))
     kc = cache["k"].at[bidx, pos].set(k_upd)
     vc = cache["v"].at[bidx, pos].set(v_upd)
-    o = L.decode_attention(q, kc, vc, pos, window=window)
+    o = L.decode_attention(q, kc, vc, pos, window=window,
+                           backend=cfg.decode_backend,
+                           cfg=cfg.decode_attn_cfg, bkv=cfg.decode_bkv)
     o = o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if cfg.n_experts:
         y, _ = L.moe(p["moe"], h, cfg, shard=shard,
                      capacity=max(4, min(x.shape[0], 4 * cfg.top_k)))
+    else:
+        y = L.ffn(p["ffn"], h)
+    return x + y, {"k": kc, "v": vc}
+
+
+def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
+    """Chunked prefill: x (B,T,d); cache {'k','v'} (B,S,kv,hd); pos0 (B,)
+    starting position of the chunk.  Writes the chunk's K/V into the cache
+    rows [pos0, pos0+T) and attends against the FULL cache with global
+    row positions — earlier chunks are visible, later rows are masked by
+    causality — so successive chunks compose exactly with per-token decode.
+    """
+    b, t, _ = x.shape
+    window = cfg.window if kind == ATTN_LOCAL else None
+    pos = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None]     # (B,T)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    bidx = jnp.arange(b)
+    # same barrier as the decode step: keep the f32 rope -> storage-dtype
+    # convert out of the cache scatter so the whole cache never goes f32
+    k_upd, v_upd = jax.lax.optimization_barrier(
+        (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
+    kc = cache["k"].at[bidx[:, None], pos].set(k_upd)
+    vc = cache["v"].at[bidx[:, None], pos].set(v_upd)
+    o = L.mea_attention(q, kc, vc, causal=True, window=window, q_pos=pos)
+    o = o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        # capacity = all chunk tokens: prefill never drops, so chunked
+        # ingestion can't diverge from per-token decode on routing overflow
+        y, _ = L.moe(p["moe"], h, cfg, capacity=b * t)
     else:
         y = L.ffn(p["ffn"], h)
     return x + y, {"k": kc, "v": vc}
@@ -149,6 +183,25 @@ def rglru_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.ffn(p["ffn"], h), {"conv": conv_state, "h": hnew}
+
+
+def rglru_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
+    """Chunked prefill: run T tokens through the recurrence starting from
+    the cached (conv, h) state and return the advanced state."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    branch = h @ p["wx"].astype(h.dtype)
+    gate = h @ p["wgate"].astype(h.dtype)
+    bx, conv_state = L.causal_conv1d_prefill(p["conv"], cache["conv"], branch)
+    r = (bx @ p["wr"].astype(bx.dtype)) + p["br"].astype(bx.dtype)
+    i = (bx @ p["wi"].astype(bx.dtype)) + p["bi"].astype(bx.dtype)
+    from repro.kernels import ref as KREF
+    hseq, h_last = KREF.rglru_with_state(
+        bx.astype(jnp.float32), r.astype(jnp.float32), i.astype(jnp.float32),
+        p["a_param"], cache["h"])
+    y = (hseq.astype(x.dtype) * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
+    x = x + y
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), {"conv": conv_state, "h": h_last}
 
 
 def rglru_cache_init(cfg: ModelConfig, b: int, dtype=jnp.bfloat16):
@@ -236,6 +289,37 @@ def mamba_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
         {"conv": conv_state, "ssm": state}
 
 
+def mamba_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
+    """Chunked prefill: advance (conv, ssm) state over T tokens at once via
+    the chunked SSD scan seeded with the cached state."""
+    b, t, _ = x.shape
+    din, g, n, hh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+    h0 = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = h0 @ p["in_proj"].astype(h0.dtype)
+    z, xbc, dt_raw = _mamba_split(cfg, zxbcdt)
+    yconv, conv_state = L.causal_conv1d_prefill(p["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(yconv)
+    xs, bc = jnp.split(xbc, [din], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    a = -jnp.exp(p["a_log"])
+    from repro.kernels import ref as KREF
+    xh = xs.reshape(b, t, hh, ph).astype(jnp.float32)
+    chunk = 64 if t % 64 == 0 else (16 if t % 16 == 0 else 1)
+    y, state = KREF.ssd_chunked(
+        xh, dt, a,
+        bmat.reshape(b, t, g, n).astype(jnp.float32),
+        cmat.reshape(b, t, g, n).astype(jnp.float32),
+        chunk=chunk, state0=cache["ssm"].transpose(0, 1, 3, 2),
+        return_state=True)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, din).astype(x.dtype)
+    y = L.rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype), \
+        {"conv": conv_state, "ssm": state.transpose(0, 1, 3, 2)}
+
+
 def mamba_cache_init(cfg: ModelConfig, b: int, dtype=jnp.bfloat16):
     conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     return {"conv": jnp.zeros((b, cfg.conv_width - 1, conv_ch), dtype),
@@ -304,13 +388,36 @@ def dec_block(p, x, cfg: ModelConfig, *, pos, enc_out,
     return x + L.ffn(p["ffn"], h), 0.0
 
 
+def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
+    """Chunked prefill for the enc-dec decoder: fill the self-attn cache
+    rows for the chunk and cross-attend the cached encoder K/V (which
+    lm_prefill populates from src_frames when present)."""
+    b, t, _ = x.shape
+    pos = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    bidx = jnp.arange(b)
+    kc = cache["k"].at[bidx[:, None], pos].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx[:, None], pos].set(v.astype(cache["v"].dtype))
+    o = L.mea_attention(q, kc, vc, causal=True, q_pos=pos)
+    x = x + o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
+    h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+    x = x + _cross_attention(p["xattn"], h,
+                             (cache["enc_k"], cache["enc_v"]), cfg)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(p["ffn"], h), {"k": kc, "v": vc,
+                                    "enc_k": cache["enc_k"],
+                                    "enc_v": cache["enc_v"]}
+
+
 def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos[:, None])
     bidx = jnp.arange(x.shape[0])
     kc = cache["k"].at[bidx, pos].set(k[:, 0])
     vc = cache["v"].at[bidx, pos].set(v[:, 0])
-    o = L.decode_attention(q, kc, vc, pos)
+    o = L.decode_attention(q, kc, vc, pos, backend=cfg.decode_backend,
+                           cfg=cfg.decode_attn_cfg, bkv=cfg.decode_bkv)
     x = x + o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,

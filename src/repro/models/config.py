@@ -64,6 +64,14 @@ class ModelConfig:
     norm_eps: float = 1e-6
     compute_dtype: str = "bfloat16"
 
+    # decode-attention kernel dispatch: "ref" = dense full-length einsum (the
+    # CPU/test path), "pallas" = coarsened split-KV kernel (kernels/
+    # decode_attention.py); decode_attn_cfg is a coarsening spec label or
+    # "auto" (repro.tune); decode_bkv is the kv block row count.
+    decode_backend: str = "ref"
+    decode_attn_cfg: str = "auto"
+    decode_bkv: int = 128
+
     # ---- derived ----
     @property
     def vocab_padded(self) -> int:

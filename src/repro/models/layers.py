@@ -164,6 +164,19 @@ def causal_conv1d_step(p, state, xt):
     return yt.astype(xt.dtype), buf[:, 1:]
 
 
+def causal_conv1d_prefill(p, state, x):
+    """Chunked form: state (B,width-1,C) left context; x (B,T,C) ->
+    (y (B,T,C), new_state) — matches T applications of causal_conv1d_step."""
+    w = p["w"]
+    width = w.shape[0]
+    t = x.shape[1]
+    buf = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B,w-1+T,C)
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(width):
+        out = out + buf[:, i:i + t].astype(jnp.float32) * w[i]
+    return (out + p["b"]).astype(x.dtype), buf[:, t:].astype(state.dtype)
+
+
 # --------------------------------------------------------------------------
 # memory-efficient GQA attention (pure-jnp flash; the XLA model path)
 # --------------------------------------------------------------------------
@@ -265,10 +278,33 @@ def mea_attention(q, k, v, *, causal=True, window=None, q_pos=None,
     return out[:, :sq].astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,
+                     backend: str = "ref", cfg="auto", bkv: int = 128):
     """Single-token attention against a cache.  q: (B,1,H,D);
-    caches: (B,S,Hkv,D); pos: (B,) current position (0-based)."""
+    caches: (B,S,Hkv,D); pos: (B,) current position (0-based).
+
+    backend="pallas" dispatches to the coarsened split-KV kernel
+    (kernels/decode_attention.py, cfg resolved through repro.tune for
+    "auto") when the cache geometry tiles; anything the kernel cannot
+    serve falls back to the dense full-length einsum below — which is also
+    the parity oracle the kernel is tested against.
+    """
     b, _, h, d = q.shape
+    if backend == "pallas":
+        s_all, hkv_all = k_cache.shape[1], k_cache.shape[2]
+        blk = min(bkv, s_all)
+        if h % hkv_all == 0 and s_all % blk == 0:
+            from repro.kernels import ops
+            rcfg = ops.resolve_cfg(cfg, "decode_attention",
+                                   (b, h, hkv_all, s_all, d),
+                                   dtype=k_cache.dtype.name,
+                                   backend="pallas", bkv=blk,
+                                   window=window or 0)
+            # an explicit degree the cache length can't tile falls back too
+            if s_all % (blk * rcfg.degree) == 0:
+                return ops.decode_attention(q, k_cache, v_cache, pos, rcfg,
+                                            bkv=blk, window=window,
+                                            scale=scale)
     s, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)

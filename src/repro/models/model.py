@@ -367,17 +367,126 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     return logits, {"blocks": list(new_blocks), "tail": new_tail}
 
 
-def lm_prefill(params, batch, cfg: ModelConfig, s_max: int, *,
-               shard: ShardCtx = NOSHARD, dtype=jnp.bfloat16):
-    """Forward pass producing last-token logits + filled decode caches.
+def _block_prefill(kind: str, p, x, cfg, cache, *, pos0):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return B.attn_block_prefill(p, x, cfg, cache, kind=kind, pos0=pos0)
+    if kind == RECURRENT:
+        return B.rglru_block_prefill(p, x, cfg, cache, pos0=pos0)
+    if kind == SSM:
+        return B.mamba_block_prefill(p, x, cfg, cache, pos0=pos0)
+    raise ValueError(kind)
 
-    Cache filling recomputes K/V projections from the final per-layer inputs;
-    to keep one code path we run the stack once collecting (k,v), states.
+
+def _select_slots(mask, new, old, *, batch_axis: int):
+    """Commit `new` cache leaves only for slots where mask is True."""
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _prefill_enc_cache(params, batch, cfg, cache):
+    """Run the encoder once and persist every decoder layer's cross K/V into
+    the stacked enc cache (the xkv_precompute trick, cached for decode)."""
+    frames = batch["src_frames"].astype(_compute_dtype(cfg))
+    bsz, s_src, _ = frames.shape
+    pos_src = jnp.broadcast_to(jnp.arange(s_src, dtype=jnp.int32)[None],
+                               (bsz, s_src))
+
+    def enc_body(x, p):
+        return B.enc_block(p, x, cfg, pos=pos_src), None
+
+    enc_x, _ = lax.scan(enc_body, frames, params["enc"]["blocks"])
+    enc_x = L.rmsnorm(params["enc"]["norm"], enc_x, cfg.norm_eps)
+
+    blk = cache["blocks"][0]
+    el = blk["enc_k"].shape[2]
+    if s_src > el:
+        raise ValueError(f"encoder length {s_src} exceeds enc cache {el}")
+    xs = params["blocks"][0]
+    wk, wv = xs["xattn"]["wk"], xs["xattn"]["wv"]            # (L, d, kv*hd)
+    ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk.astype(enc_x.dtype))
+    ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv.astype(enc_x.dtype))
+    np_, kvh, hd = ek.shape[0], cfg.n_kv_heads, cfg.hd
+    ek = ek.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_k"].dtype)
+    ev = ev.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_v"].dtype)
+    blk = {**blk, "enc_k": blk["enc_k"].at[:, :, :s_src].set(ek),
+           "enc_v": blk["enc_v"].at[:, :, :s_src].set(ev)}
+    return {**cache, "blocks": [blk] + list(cache["blocks"][1:])}
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
+               cache=None, pos0=None, mask=None, shard: ShardCtx = NOSHARD,
+               dtype=jnp.bfloat16):
+    """Chunked prefill: push a (B, T) token chunk through the stack, FILLING
+    the decode caches (attention K/V rows [pos0, pos0+T), recurrent/SSM/conv
+    states advanced T steps, enc-dec cross K/V from src_frames).
+
+    Call repeatedly with increasing ``pos0`` to ingest a long prompt in
+    chunks; composes exactly with per-token `lm_decode_step`, which is the
+    parity invariant tests/test_prefill.py asserts.
+
+    cache: existing decode cache to continue (created fresh from ``s_max``
+    when None).  pos0: (B,) chunk start positions (default zeros).
+    mask: optional (B,) bool — only masked slots commit cache/state updates
+    (the continuous-batching admit path: other slots' caches are untouched).
+    Returns (last-chunk-token logits (B, vocab) f32, new cache).
     """
-    # run full forward for hidden states AND collect caches per layer by
-    # re-running projections — for the assigned shapes prefill cost is
-    # dominated by attention itself, so the extra qkv matmuls are ~5%.
-    hidden, _ = lm_apply(params, batch, cfg, shard=shard)
-    logits = (hidden[:, -1] @ _head(params, cfg).astype(hidden.dtype))
-    cache = lm_init_cache(cfg, batch["tokens"].shape[0], s_max, dtype)
-    return logits.astype(jnp.float32), cache
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    if cache is None:
+        if s_max is None:
+            raise ValueError("lm_prefill needs either a cache or s_max")
+        cache = lm_init_cache(cfg, b, s_max, dtype)
+    if pos0 is None:
+        pos0 = jnp.zeros((b,), jnp.int32)
+    old_cache = cache
+
+    period, n_periods, tail = _period(cfg)
+    if cfg.is_encdec and batch.get("src_frames") is not None:
+        cache = _prefill_enc_cache(params, batch, cfg, cache)
+
+    x = _embed(params, tokens, cfg, batch)
+    kinds = period
+
+    def period_body(carry, pblk):
+        x, caches, i = carry
+        cblk = [jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), c)
+            for c in caches]
+        newc = []
+        for j, kind in enumerate(kinds):
+            if cfg.is_encdec:
+                x, nc = B.dec_block_prefill(pblk[j], x, cfg, {**cblk[j]},
+                                            pos0=pos0)
+            else:
+                x, nc = _block_prefill(kind, pblk[j], x, cfg, cblk[j],
+                                       pos0=pos0)
+            newc.append(nc)
+        caches = [jax.tree.map(
+            lambda a, u: lax.dynamic_update_index_in_dim(a, u, i, 0), c, nc)
+            for c, nc in zip(caches, newc)]
+        return (x, caches, i + 1), None
+
+    (x, new_blocks, _), _ = lax.scan(
+        period_body, (x, list(cache["blocks"]), jnp.asarray(0, jnp.int32)),
+        tuple(params["blocks"]))
+    new_tail = []
+    for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
+        x, nc = _block_prefill(kind, p_t, x, cfg, c_t, pos0=pos0)
+        new_tail.append(nc)
+
+    new_cache = {"blocks": list(new_blocks), "tail": new_tail}
+    if mask is not None:
+        new_cache = {
+            "blocks": [_select_slots(mask, n, o, batch_axis=1)
+                       for n, o in zip(new_cache["blocks"],
+                                       old_cache["blocks"])],
+            "tail": [_select_slots(mask, n, o, batch_axis=0)
+                     for n, o in zip(new_cache["tail"], old_cache["tail"])],
+        }
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, -1] @ _head(params, cfg).astype(x.dtype)).astype(jnp.float32)
+    return logits[:, : cfg.vocab], new_cache

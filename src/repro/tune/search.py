@@ -157,6 +157,16 @@ def enumerate_candidates(spec: KernelSpec,
             for kind, deg in _kind_degree_pairs(degrees):
                 if s % (bq * deg) == 0:
                     out.append(CoarseningConfig(kind, deg))
+    elif fam == "decode_attention":
+        b, h, hkv, s, d = spec.shape
+        bkv = p.get("bkv", 128)
+        # kv-split divisibility: each program owns C blocks of bkv cache
+        # rows, so the allocated length must tile by C*bkv.  Replication and
+        # SIMD are not implemented by the kernel -> excluded from its space.
+        if s % bkv == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if s % (bkv * deg) == 0:
+                    out.append(CoarseningConfig(kind, deg))
     elif fam == "ssd":
         b, h, g, s, pp, nn = spec.shape
         chunk = p.get("chunk", 64)
@@ -253,6 +263,12 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
         c = analysis.matmul_cost(s, d, s, cfg, bm=p.get("bq", 128), bn=d,
                                  bk=p.get("bkv", 128), dtype_bytes=dtb)
         return c.modeled_s * b * h
+
+    if fam == "decode_attention":
+        b, h, hkv, s, d = spec.shape
+        return analysis.decode_attention_cost(
+            b, h, hkv, s, d, cfg, bkv=p.get("bkv", 128),
+            kv_len=p.get("kv_len", None), dtype_bytes=dtb).modeled_s
 
     if fam == "ssd":
         b, h, g, s, pp, nn = spec.shape

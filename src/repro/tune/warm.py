@@ -61,7 +61,20 @@ def warm_for_model(cfg, *, seq: int, batch: int,
                        _round_down(cfg.d_ff, 128),
                        _round_down(d, 256)),
             dtype="bfloat16", bm=128, bn=128, bk=256),
+        # split-KV decode attention at the full allocated cache length (the
+        # serve hot loop); skipped via the ValueError path when seq doesn't
+        # tile by the kv block
+        "decode_attention": KernelSpec.make(
+            "decode_attention",
+            (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
+            dtype="bfloat16", bkv=min(128, seq), window=0),
     }
+    if cfg.window:
+        # mixed global/local stacks dispatch two param sets — warm both
+        specs["decode_attention_local"] = KernelSpec.make(
+            "decode_attention",
+            (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
+            dtype="bfloat16", bkv=min(128, seq), window=cfg.window)
     out = {}
     for fam, spec in specs.items():
         try:
@@ -125,6 +138,19 @@ def wall_measurer(reps: int = 3):
             x = jax.random.normal(key, (rows, cols))
             fn = lambda: ops.stencil5(x, cfg,
                                       block_rows=p.get("block_rows", 8))
+        elif spec.family == "decode_attention":
+            b, h, hkv, s, d = spec.shape
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            q = jax.random.normal(key, (b, 1, h, d), dt)
+            kc = jax.random.normal(jax.random.fold_in(key, 1),
+                                   (b, s, hkv, d), dt)
+            vc = jax.random.normal(jax.random.fold_in(key, 2),
+                                   (b, s, hkv, d), dt)
+            pos = jnp.full((b,), s - 1, jnp.int32)
+            w = p.get("window", 0) or None
+            fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
+                                              bkv=p.get("bkv", 128),
+                                              window=w)
         elif spec.family == "embed_gather":
             n_ids, vocab, d = spec.shape
             ids = jax.random.randint(key, (n_ids,), 0, vocab)

@@ -1,0 +1,185 @@
+"""Split-KV decode-attention kernel: parity vs the dense oracle across the
+coarsening matrix x (ragged pos, GQA, sliding window), the new repro.tune
+family (candidate legality, cost direction, cache round-trip), and the
+cfg="auto" dispatch through kernels.ops."""
+import importlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoarseningConfig, KIND_GAPPED
+from repro.core.analysis import decode_attention_cost
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.tune import KernelSpec, TuningCache, autotune, \
+    enumerate_candidates, model_cost, search
+
+tune_cache = importlib.import_module("repro.tune.cache")
+tune_search = importlib.import_module("repro.tune.search")
+
+KEY = jax.random.PRNGKey(7)
+B, HKV, G, S, D = 2, 2, 2, 256, 32
+H = HKV * G
+BKV = 64
+
+SPECS = ("none", "con2", "con4", "gap2", "gap4")
+
+
+def _qkv(dtype=jnp.float32):
+    q = (jax.random.normal(KEY, (B, 1, H, D)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, HKV, D))
+          * 0.5).astype(dtype)
+    vc = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (B, S, HKV, D)).astype(dtype)
+    return q, kc, vc
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("pos", [(0, 0), (17, 200), (S - 1, S - 1), (5, 163)],
+                         ids=["zero", "ragged", "full", "ragged2"])
+@pytest.mark.parametrize("window", [None, 32], ids=["global", "window"])
+def test_matches_dense_oracle(spec, pos, window):
+    """Every legal (kind, degree) merely redistributes kv blocks — output
+    must equal the dense layers.decode_attention path, per slot, at ragged
+    per-slot positions."""
+    q, kc, vc = _qkv()
+    pos = jnp.asarray(pos, jnp.int32)
+    want = L.decode_attention(q, kc, vc, pos, window=window)
+    got = ops.decode_attention(q, kc, vc, pos, CoarseningConfig.parse(spec),
+                               bkv=BKV, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_cache_parity():
+    q, kc, vc = _qkv(jnp.bfloat16)
+    pos = jnp.asarray([100, 3], jnp.int32)
+    want = L.decode_attention(q, kc, vc, pos)
+    got = ops.decode_attention(q, kc, vc, pos, "con4", bkv=BKV)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_layers_dispatch_falls_back_on_bad_geometry():
+    """backend='pallas' with a cache length the kv block can't tile must
+    fall back to the dense path, not raise."""
+    q = jax.random.normal(KEY, (B, 1, H, D))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 1), (B, 48, HKV, D))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 2), (B, 48, HKV, D))
+    pos = jnp.asarray([5, 40], jnp.int32)
+    want = L.decode_attention(q, kc, vc, pos)
+    got = L.decode_attention(q, kc, vc, pos, backend="pallas", bkv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ref_oracle_matches_layers():
+    q, kc, vc = _qkv()
+    pos = jnp.asarray([31, 250], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ref.decode_attention(q, kc, vc, pos, window=16)),
+        np.asarray(L.decode_attention(q, kc, vc, pos, window=16)),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tuner family
+# ---------------------------------------------------------------------------
+
+DEC_SPEC = KernelSpec.make("decode_attention", (8, 32, 8, 4096, 128),
+                           dtype="bfloat16", bkv=128, window=0)
+
+
+def test_candidates_respect_kv_split_divisibility():
+    cands = enumerate_candidates(DEC_SPEC)
+    assert cands
+    for c in cands:
+        assert 4096 % (128 * c.degree) == 0
+        # kernel implements neither replication nor SIMD
+        assert c.replication == 1 and c.vector_width == 1
+    small = KernelSpec.make("decode_attention", (2, 4, 2, 256, 32),
+                            dtype="float32", bkv=128, window=0)
+    assert all(c.degree <= 2 for c in enumerate_candidates(small))
+
+
+def test_coarsening_beats_dense_baseline_from_512():
+    """The acceptance direction the decode benchmark table asserts: every
+    coarsened degree beats the dense full-length einsum at S >= 512, and
+    deeper coarsening is monotone at paper scale."""
+    for s in (512, 1024, 2048, 4096):
+        dense = decode_attention_cost(8, 32, 8, s, 128, CoarseningConfig(),
+                                      bkv=128, dense=True).modeled_s
+        prev = dense
+        for deg in (2, 4):
+            c = decode_attention_cost(8, 32, 8, s, 128,
+                                      CoarseningConfig.parse(f"con{deg}"),
+                                      bkv=128, kv_len=s).modeled_s
+            assert c < dense, (s, deg, c, dense)
+            assert c < prev, (s, deg)
+            prev = c
+
+
+def test_length_aware_grid_tracks_live_prefix():
+    """Cost must track kv_len (the live prefix), not the allocated length."""
+    cfg = CoarseningConfig.parse("con4")
+    full = decode_attention_cost(8, 32, 8, 4096, 128, cfg, bkv=128,
+                                 kv_len=4096).modeled_s
+    short = decode_attention_cost(8, 32, 8, 4096, 128, cfg, bkv=128,
+                                  kv_len=512).modeled_s
+    assert short < full / 4
+
+
+def test_auto_matches_or_beats_fixed_degrees():
+    res = search(DEC_SPEC)
+    best = model_cost(DEC_SPEC, res.best)
+    for deg in (1, 2, 4, 8):
+        cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+        assert best <= model_cost(DEC_SPEC, cfg) * (1 + 1e-9)
+
+
+def test_tuner_cache_roundtrip(tmp_path):
+    cache = TuningCache(str(tmp_path / "tune.json"))
+    cfg = autotune(DEC_SPEC, cache=cache)
+    fresh = TuningCache(str(tmp_path / "tune.json"))
+    assert fresh.get(DEC_SPEC) == cfg
+    blob = json.load(open(str(tmp_path / "tune.json")))
+    [entry] = blob["entries"].values()
+    assert entry["cfg"] == cfg.label
+
+
+@pytest.fixture
+def scratch_default_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv(tune_cache.ENV_VAR, str(tmp_path / "auto.json"))
+    tune_cache._DEFAULT.clear()
+    ops._auto_cfg.cache_clear()
+    yield str(tmp_path / "auto.json")
+    tune_cache._DEFAULT.clear()
+    ops._auto_cfg.cache_clear()
+
+
+def test_ops_auto_dispatch(scratch_default_cache):
+    """cfg='auto' resolves through the tuner, persists the winner under the
+    decode_attention family key, and matches the explicitly-tuned result."""
+    q, kc, vc = _qkv()
+    pos = jnp.asarray([40, 130], jnp.int32)
+    before = tune_search.SEARCH_COUNT
+    got = ops.decode_attention(q, kc, vc, pos, "auto", bkv=BKV)
+    assert tune_search.SEARCH_COUNT == before + 1
+    spec = KernelSpec.make("decode_attention", (B, H, HKV, S, D),
+                           dtype="float32", bkv=BKV, window=0)
+    best = search(spec).best
+    want = ops.decode_attention(q, kc, vc, pos, best, bkv=BKV)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    blob = json.load(open(scratch_default_cache))
+    assert blob["entries"][spec.key]["cfg"] == best.label
+    # second call: served from the persisted cache, no re-search
+    ops._auto_cfg.cache_clear()
+    tune_cache._DEFAULT.clear()
+    mid = tune_search.SEARCH_COUNT
+    ops.decode_attention(q, kc, vc, pos, "auto", bkv=BKV)
+    assert tune_search.SEARCH_COUNT == mid
