@@ -1,0 +1,87 @@
+"""Grouped-expert MoE FFN table: unfused einsum baseline vs the fused
+kernel at fixed expert-coarsening degrees vs AUTO, across (tokens,
+experts, top_k) routing points.
+
+For each point (model-scale d=2048, ff=1024, capacity = the layers.moe
+default 1.5 * k * T / E) emit:
+
+  dense          the unfused XLA path: three per-expert einsums with the
+                 (E, C, ff) gate/up intermediates round-tripping HBM in f32
+  con1/2/4/8     the fused grouped-expert kernel, expert-axis coarsening at
+                 fixed consecutive degrees (one wide weight DMA per operand)
+  AUTO           the repro.tune pick over the full (kind, degree) space
+
+`derived` is the modeled v5e time (core/analysis.moe_ffn_cost);
+`us_per_call` is CPU interpret wall time at a reduced geometry
+(transparency only).  The acceptance bar: at every point with E >= 16 at
+least one coarsened degree beats dense, and AUTO matches or beats every
+fixed degree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoarseningConfig
+from repro.core.analysis import moe_ffn_cost
+from repro.kernels import ops, ref
+from repro.models.layers import moe_default_capacity
+from repro.tune import KernelSpec, search
+from benchmarks.common import wall_us, emit
+
+# modeled (paper-scale) geometry
+D, FF = 2048, 1024
+# measured (CPU interpret) geometry
+MD, MF, MCAP = 64, 128, 8
+# (tokens, experts, top_k): small routed, olmoe-1b-7b, qwen2-moe (60->64
+# padded), and a wide-expert point
+POINTS = ((256, 16, 2), (1024, 64, 8), (1024, 64, 4), (4096, 128, 8))
+DEGREES = (1, 2, 4, 8)
+
+
+def _measured_fn(e, cfg):
+    key = jax.random.PRNGKey(0)
+    xe = jax.random.normal(key, (e, MCAP, MD)) * 0.5
+    w1 = jax.random.normal(jax.random.fold_in(key, 1), (e, MD, MF)) / 8
+    w3 = jax.random.normal(jax.random.fold_in(key, 2), (e, MD, MF)) / 8
+    w2 = jax.random.normal(jax.random.fold_in(key, 3), (e, MF, MD)) / 11
+    wts = jax.random.uniform(jax.random.fold_in(key, 4), (e, MCAP))
+    if cfg is None:
+        fn = jax.jit(ref.moe_ffn)
+        return wall_us(lambda: fn(xe, w1, w3, w2, wts))
+    if e % cfg.degree:
+        return -1.0
+    return wall_us(lambda: ops.moe_ffn(xe, w1, w3, w2, wts, cfg))
+
+
+def main() -> None:
+    for t, e, k in POINTS:
+        cap = moe_default_capacity(t, e, k)
+        name = f"moe,T{t}xE{e}xK{k}"
+        measurable = e <= 64
+        dense = moe_ffn_cost(e, cap, D, FF, CoarseningConfig(),
+                             dense=True)
+        emit(f"{name},dense",
+             _measured_fn(e, None) if measurable else -1.0,
+             dense.modeled_s * 1e6, speedup=1.0)
+        for deg in DEGREES:
+            if e % deg:
+                emit(f"{name},con{deg}", -1, -1, status="NA")
+                continue
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            c = moe_ffn_cost(e, cap, D, FF, cfg)
+            emit(f"{name},con{deg}",
+                 _measured_fn(e, cfg) if measurable else -1.0,
+                 c.modeled_s * 1e6,
+                 speedup=round(dense.modeled_s / c.modeled_s, 2))
+        spec = KernelSpec.make("moe_ffn", (e, cap, D, FF), dtype="bfloat16")
+        best = search(spec).best
+        c = moe_ffn_cost(e, cap, D, FF, best)
+        emit(f"{name},AUTO[{best.label}]",
+             _measured_fn(e, best) if measurable else -1.0,
+             c.modeled_s * 1e6,
+             speedup=round(dense.modeled_s / c.modeled_s, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ Tables (one per paper figure):
   roofline — §Roofline per (arch x shape), analytic terms
   tuned  — autotuner pick vs base vs the paper's fixed degrees
   decode — dense einsum baseline vs coarsened split-KV decode attention
+  moe    — unfused einsum baseline vs the fused grouped-expert MoE FFN
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -27,7 +28,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline, tuned, decode)
+                        roofline, tuned, decode, moe)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -40,6 +41,7 @@ TABLES = {
     "roofline": roofline.main,
     "tuned": tuned.main,
     "decode": decode.main,
+    "moe": moe.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

@@ -288,6 +288,56 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     )
 
 
+def moe_ffn_cost(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
+                 dtype_bytes: int = 2, dense: bool = False) -> KernelCost:
+    """Grouped-expert MoE FFN over the padded (E, C, d) dispatch buffer.
+
+    The work-item axis is the EXPERT axis: the grid walks E/C programs, each
+    owning C experts' full gate/up/down chain.  Per program, five operands
+    move: x pane, w1/w3/w2 panes, output pane (consecutive = one wide DMA
+    each, gapped = C strided DMAs each — the LSU analogs); the (cap, f)
+    silu-gate intermediate stays in VMEM.
+
+    dense=True models the unfused XLA einsum baseline: three separate
+    per-expert einsums (grid of E degree-1 steps, each re-issuing its weight
+    descriptors) plus f32 HBM round-trips for the (E, cap, f) gate and up
+    intermediates between the einsums — traffic the fused kernel never
+    emits (the pipes-paper producer/consumer saving).
+    """
+    c = 1 if dense else cfg.degree
+    grid = max(1, e // c)
+    descs = c if (not dense and cfg.kind == KIND_GAPPED) else 1
+
+    w_bytes = c * d * f * dtype_bytes / descs
+    x_bytes = c * cap * d * dtype_bytes / descs
+    o_bytes = c * cap * d * 4 / descs
+    dma_s = (3 * _dma_time(w_bytes, descs) + _dma_time(x_bytes, descs)
+             + _dma_time(o_bytes, descs))
+
+    flops = 6.0 * c * cap * d * f            # x@w1 + x@w3 + h@w2
+    rate = MXU_FLOPS_BF16 if dtype_bytes == 2 else MXU_FLOPS_F32
+    eff = min(1.0, cap / 128)                # cap rows under-fill the MXU
+    compute_s = flops / (rate * eff)
+
+    step = max(dma_s, compute_s)
+    total = (dma_s + compute_s) + step * max(0, grid - 1)
+
+    if dense:
+        # gate and up intermediates: two (E, cap, f) activation-dtype
+        # buffers, each written then re-read between the einsums
+        total += 2 * _dma_time(e * cap * f * float(dtype_bytes), 2)
+
+    vmem = 2 * (3 * c * d * f * dtype_bytes + 2 * c * cap * d * dtype_bytes) \
+        + c * cap * f * 4
+    return KernelCost(
+        label="dense" if dense else cfg.label, grid=grid,
+        dmas_per_step=5 * descs, dma_bytes=w_bytes,
+        vmem_bytes=vmem, dma_sems=5 * descs,
+        dma_s_per_step=dma_s, compute_s_per_step=compute_s, modeled_s=total,
+        bound="memory" if dma_s >= compute_s else "compute",
+    )
+
+
 def scan_cost(rows: int, cols: int, cfg: CoarseningConfig, *,
               arith_per_elem: float = 4.0, dtype_bytes: int = 4,
               block_cols: int = 1024,

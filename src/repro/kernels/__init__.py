@@ -4,6 +4,8 @@ Families: ew_stream (Fig.6 microbenchmark), gather_stream (irregular access,
 table-resident), windowed_gather (irregular access with scalar-prefetched
 data-dependent window DMAs — the true LSU-cache analog), embed_gather
 (model-scale irregular access), matmul, stencil (Hotspot), chunk_scan
-(Pathfinder DP), flash_attention, ssd (Mamba-2), rglru (RecurrentGemma).  `ops` holds jit'd wrappers; `ref`
-holds the pure-jnp oracles used by tests and by the XLA dry-run path.
+(Pathfinder DP), flash_attention, decode_attention (split-KV serving),
+moe_ffn (grouped-expert fused FFN, expert-axis coarsening), ssd (Mamba-2),
+rglru (RecurrentGemma).  `ops` holds jit'd wrappers; `ref` holds the
+pure-jnp oracles used by tests and by the XLA dry-run path.
 """

@@ -1,0 +1,107 @@
+"""Grouped-expert MoE FFN with expert coarsening (fused gate/up/down).
+
+The MoE layer's dispatch buffer is a padded ``(E_pad, C, d)`` tensor — many
+small per-expert matmuls, exactly the launch-bound shape the paper coarsens.
+The coarsenable work-item axis here is the EXPERT axis: each program owns
+``degree`` experts,
+
+  consecutive : degree adjacent experts -> one wide (degree*d, ff) weight
+                DMA per operand per program (the burst-coalesced LSU,
+                paper Fig. 4 top)
+  gapped      : degree experts strided E_pad/degree apart -> degree strided
+                DMAs per operand (the narrow cached LSUs, paper Fig. 4
+                bottom)
+
+and computes the FULL ``silu(x@w1) * (x@w3) @ w2`` chain for each of them
+with the ``(cap, ff)`` intermediate held in registers/VMEM — the
+producer/consumer fusion of Zarch & Becchi's pipes paper: the three einsums
+the XLA path runs would round-trip that intermediate through HBM twice.
+The per-token combine weights (top-k router prob x live mask) are fused in
+as the final scale, so the kernel's output scatters directly into the token
+accumulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
+
+
+def make_kernel(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
+                interpret: bool = True) -> Callable:
+    """Build the grouped-expert fused-FFN kernel.
+
+    Returned callable: run(xe (E,C,d), w1 (E,d,F), w3 (E,d,F), w2 (E,F,d),
+    wts (E,C)) -> (E,C,d) float32 — ``(silu(xe@w1) * (xe@w3)) @ w2`` per
+    expert, scaled by the combine weight.
+    """
+    c = cfg.degree
+    if e % c:
+        raise ValueError(f"experts {e} not tileable by degree {c}")
+    grid = e // c
+    gapped = cfg.kind == KIND_GAPPED
+
+    def body(x_ref, w1_ref, w3_ref, w2_ref, wt_ref, o_ref):
+        x = x_ref[...].reshape(c, cap, d)
+        w1 = w1_ref[...].reshape(c, d, f)
+        w3 = w3_ref[...].reshape(c, d, f)
+        w2 = w2_ref[...].reshape(c, f, d)
+        wt = wt_ref[...].reshape(c, cap)
+        out = jnp.zeros((c, cap, d), jnp.float32)
+        for j in range(c):              # unrolled: the fused experts
+            xj = x[j]
+            h = jax.nn.silu(jnp.dot(xj, w1[j],
+                                    preferred_element_type=jnp.float32))
+            h = h * jnp.dot(xj, w3[j], preferred_element_type=jnp.float32)
+            # the (cap, f) intermediate never leaves the program
+            yj = jnp.dot(h.astype(xj.dtype), w2[j],
+                         preferred_element_type=jnp.float32)
+            yj = yj * wt[j][:, None].astype(jnp.float32)
+            out = out.at[j].set(yj)
+        o_ref[...] = out.reshape(o_ref.shape)
+
+    # Expert-axis views: consecutive fetches one contiguous pane of C
+    # experts per operand; gapped views the expert axis as (C, E/C) and
+    # fetches C strided panes (experts i, i+grid, ..., i+(C-1)*grid).
+    if gapped:
+        x_spec = pl.BlockSpec((c, 1, cap, d), lambda i: (0, i, 0, 0))
+        w_spec = pl.BlockSpec((c, 1, d, f), lambda i: (0, i, 0, 0))
+        w2_spec = pl.BlockSpec((c, 1, f, d), lambda i: (0, i, 0, 0))
+        wt_spec = pl.BlockSpec((c, 1, cap), lambda i: (0, i, 0))
+        o_spec = pl.BlockSpec((c, 1, cap, d), lambda i: (0, i, 0, 0))
+        view = lambda t: t.reshape((c, grid) + t.shape[1:])
+        o_shape = (c, grid, cap, d)
+        unview = lambda o: o.reshape(e, cap, d)
+    else:
+        x_spec = pl.BlockSpec((c, cap, d), lambda i: (i, 0, 0))
+        w_spec = pl.BlockSpec((c, d, f), lambda i: (i, 0, 0))
+        w2_spec = pl.BlockSpec((c, f, d), lambda i: (i, 0, 0))
+        wt_spec = pl.BlockSpec((c, cap), lambda i: (i, 0))
+        o_spec = pl.BlockSpec((c, cap, d), lambda i: (i, 0, 0))
+        view = lambda t: t
+        o_shape = (e, cap, d)
+        unview = lambda o: o
+
+    call = pl.pallas_call(
+        body,
+        grid=(grid,),
+        in_specs=[x_spec, w_spec, w_spec, w2_spec, wt_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        cost_estimate=pl.CostEstimate(
+            flops=6 * e * cap * d * f,
+            bytes_accessed=2 * (3 * e * d * f + 2 * e * cap * d),
+            transcendentals=e * cap * f),
+        interpret=interpret,
+    )
+
+    def run(xe, w1, w3, w2, wts):
+        return unview(call(view(xe), view(w1), view(w3), view(w2),
+                           view(wts)))
+
+    return run

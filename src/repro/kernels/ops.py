@@ -26,6 +26,7 @@ from repro.kernels import (
     chunk_scan as _scan,
     flash_attention as _flash,
     decode_attention as _decode,
+    moe_ffn as _moe_ffn,
     ssd as _ssd,
     rglru as _rglru,
     ref,
@@ -167,6 +168,27 @@ def decode_attention(q, k_cache, v_cache, pos, cfg: CoarseningConfig | str = BAS
                       window=window or 0)
     return _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale,
                       backend)(q, k_cache, v_cache, pos)
+
+
+@functools.lru_cache(maxsize=256)
+def _moe_ffn_fn(e, cap, d, f, cfg, backend):
+    if backend == "ref":
+        return jax.jit(ref.moe_ffn)
+    return jax.jit(_moe_ffn.make_kernel(e, cap, d, f, cfg))
+
+
+def moe_ffn(xe, w1, w3, w2, wts, cfg: CoarseningConfig | str = BASE, *,
+            backend: str = "pallas"):
+    """Grouped-expert fused gate/up/down FFN over the padded MoE dispatch
+    buffer.  xe: (E,C,d); w1,w3: (E,d,F); w2: (E,F,d); wts: (E,C) combine
+    weights -> (E,C,d) float32.  The coarsening axis is the EXPERT axis
+    (each program owns cfg.degree experts; consecutive = one wide weight
+    DMA per operand, gapped = degree strided DMAs)."""
+    e, cap, d = xe.shape
+    f = w1.shape[-1]
+    cfg = resolve_cfg(cfg, "moe_ffn", (e, cap, d, f), dtype=xe.dtype.name,
+                      backend=backend)
+    return _moe_ffn_fn(e, cap, d, f, cfg, backend)(xe, w1, w3, w2, wts)
 
 
 @functools.lru_cache(maxsize=256)

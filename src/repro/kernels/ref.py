@@ -121,6 +121,25 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+# --- grouped-expert MoE FFN ---------------------------------------------------
+
+def moe_ffn(xe: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+            wts: jax.Array) -> jax.Array:
+    """Oracle for the grouped-expert fused FFN: per-expert
+    ``(silu(xe@w1) * (xe@w3)) @ w2`` over the padded dispatch buffer,
+    scaled by the per-token combine weights.
+
+    xe: (E,C,d); w1,w3: (E,d,F); w2: (E,F,d); wts: (E,C) -> (E,C,d) f32.
+    """
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1,
+                               preferred_element_type=jnp.float32))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3,
+                       preferred_element_type=jnp.float32)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(xe.dtype), w2,
+                    preferred_element_type=jnp.float32)
+    return ye * wts[..., None].astype(jnp.float32)
+
+
 # --- Mamba-2 SSD --------------------------------------------------------------
 
 def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,

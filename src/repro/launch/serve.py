@@ -46,9 +46,12 @@ class BatchedServer:
     def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
                  chunk: int = 16, decode_block: int = 1,
                  temperature: float = 0.0, seed: int = 0,
-                 tune: str | None = None, decode_backend: str | None = None):
+                 tune: str | None = None, decode_backend: str | None = None,
+                 moe_backend: str | None = None):
         if decode_backend is not None:
             cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
+        if moe_backend is not None:
+            cfg = dataclasses.replace(cfg, moe_backend=moe_backend)
         if tune:
             # pre-tune the kernel families this server's hot loops hit: the
             # ops-level streams at prompt-ingest scale plus the split-KV
@@ -197,6 +200,10 @@ def main():
     ap.add_argument("--decode-backend", default=None,
                     choices=[None, "ref", "pallas"],
                     help="decode attention path (pallas = split-KV kernel)")
+    ap.add_argument("--moe-backend", default=None,
+                    choices=[None, "ref", "pallas"],
+                    help="expert FFN path (pallas = fused grouped-expert "
+                         "kernel, expert-axis coarsening)")
     from repro.tune import TUNE_CHOICES
     ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
                     help="warm the coarsening tuning cache before serving")
@@ -209,7 +216,8 @@ def main():
     server = BatchedServer(cfg, params, slots=args.slots,
                            max_len=args.max_len, chunk=args.chunk,
                            decode_block=args.decode_block, tune=args.tune,
-                           decode_backend=args.decode_backend)
+                           decode_backend=args.decode_backend,
+                           moe_backend=args.moe_backend)
 
     rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))

@@ -51,7 +51,7 @@ def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
         y, aux = L.moe(p["moe"], h, cfg, shard=shard, capacity=moe_capacity)
     else:
         h2 = shard.constrain(h, lambda P, c: P(c.dp, None, None))
-        y = L.ffn(p["ffn"], h2)
+        y = L.ffn(p["ffn"], h2, backend=cfg.ffn_backend)
     return x + y, aux
 
 
@@ -77,7 +77,7 @@ def attn_block_decode(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
         y, _ = L.moe(p["moe"], h, cfg, shard=shard,
                      capacity=max(4, min(x.shape[0], 4 * cfg.top_k)))
     else:
-        y = L.ffn(p["ffn"], h)
+        y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
     return x + y, {"k": kc, "v": vc}
 
 
@@ -109,7 +109,7 @@ def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
         # ingestion can't diverge from per-token decode on routing overflow
         y, _ = L.moe(p["moe"], h, cfg, capacity=b * t)
     else:
-        y = L.ffn(p["ffn"], h)
+        y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
     return x + y, {"k": kc, "v": vc}
 
 
@@ -155,7 +155,7 @@ def rglru_block(p, x, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD):
     y = (hseq * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), 0.0
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), 0.0
 
 
 def _rglru_out(p, dtype):
@@ -182,7 +182,8 @@ def rglru_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     y = (hnew[:, None].astype(x.dtype) * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), {"conv": conv_state, "h": hnew}
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), \
+        {"conv": conv_state, "h": hnew}
 
 
 def rglru_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
@@ -201,7 +202,8 @@ def rglru_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
     y = (hseq.astype(x.dtype) * jax.nn.gelu(gate)) @ _rglru_out(p, x.dtype)
     x = x + y
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), {"conv": conv_state, "h": h_last}
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), \
+        {"conv": conv_state, "h": h_last}
 
 
 def rglru_cache_init(cfg: ModelConfig, b: int, dtype=jnp.bfloat16):
@@ -345,7 +347,7 @@ def enc_block(p, x, cfg: ModelConfig, *, pos, shard: ShardCtx = NOSHARD):
     o = L.mea_attention(q, k, v, causal=False, q_pos=pos)
     x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h)
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
 
 
 def dec_block_init(key, cfg: ModelConfig):
@@ -385,7 +387,7 @@ def dec_block(p, x, cfg: ModelConfig, *, pos, enc_out,
         else enc_kv(p["xattn"], enc_out, cfg)
     x = x + _cross_attention(p["xattn"], h, kv, cfg)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), 0.0
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), 0.0
 
 
 def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
@@ -405,7 +407,7 @@ def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
     x = x + _cross_attention(p["xattn"], h,
                              (cache["enc_k"], cache["enc_v"]), cfg)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), {"k": kc, "v": vc,
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), {"k": kc, "v": vc,
                                     "enc_k": cache["enc_k"],
                                     "enc_v": cache["enc_v"]}
 
@@ -423,6 +425,6 @@ def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     x = x + _cross_attention(p["xattn"], h,
                              (cache["enc_k"], cache["enc_v"]), cfg)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    return x + L.ffn(p["ffn"], h), {"k": kc, "v": vc,
+    return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), {"k": kc, "v": vc,
                                     "enc_k": cache["enc_k"],
                                     "enc_v": cache["enc_v"]}

@@ -38,10 +38,19 @@ class ModelConfig:
     n_shared_experts: int = 0
     top_k: int = 0
     moe_d_ff: int = 0
-    # §Perf lever: dtype of the EP combine psum (bf16 halves the per-layer
-    # expert-combine wire at negligible quality cost — the contributions are
-    # already bf16 activations upcast for the scatter)
+    # §Perf lever: dtype of the expert combine — the EP psum wire on the
+    # shardmap path AND the combine-scatter accumulator on the single-shard
+    # path (bf16 halves both at negligible quality cost — the contributions
+    # are already bf16 activations upcast for the scatter)
     moe_combine_dtype: str = "float32"
+    # expert-FFN kernel dispatch: "ref" = three per-expert einsums (the
+    # CPU/test oracle path), "pallas" = fused grouped-expert kernel
+    # (kernels/moe_ffn.py) with the EXPERT axis as the coarsening axis;
+    # moe_ffn_cfg is a coarsening spec label or "auto" (repro.tune).
+    # Geometries the kernel can't tile fall back to the einsum path;
+    # shared experts stay on the dense ffn() path.
+    moe_backend: str = "ref"
+    moe_ffn_cfg: str = "auto"
 
     # SSM (mamba2)
     ssm_state: int = 0
@@ -71,6 +80,12 @@ class ModelConfig:
     decode_backend: str = "ref"
     decode_attn_cfg: str = "auto"
     decode_bkv: int = 128
+
+    # dense-FFN matmul dispatch: every ffn() gate/up/down matmul routes
+    # through ops.matmul with this backend ("ref" = dtype-preserving
+    # passthrough for CPU training; "pallas" = the coarsenable blocked
+    # kernel, cfg="auto" through repro.tune)
+    ffn_backend: str = "ref"
 
     # ---- derived ----
     @property

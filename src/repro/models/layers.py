@@ -389,9 +389,28 @@ def ffn_init(key, d, d_ff):
             "w2": dense_init(ks[2], d_ff, d, scale=1.0 / math.sqrt(d_ff))}
 
 
-def ffn(p, x):
-    h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
-    return h @ p["w2"].astype(x.dtype)
+def ffn(p, x, *, backend: str = "ref", cfg="auto"):
+    """SwiGLU FFN.  The gate/up/down matmuls route through ops.matmul so
+    dense-FFN models hit the coarsening tuner too: backend="ref" is a
+    dtype-preserving passthrough (the CPU-training path — numerics
+    unchanged); backend="pallas" dispatches the blocked coarsenable kernel
+    with cfg="auto" resolved through repro.tune.  Geometries the kernel's
+    default (bm=128, bn=128, bk=256) blocks can't tile fall back to the
+    passthrough."""
+    from repro.kernels import ops
+    w1 = p["w1"].astype(x.dtype)
+    w3 = p["w3"].astype(x.dtype)
+    w2 = p["w2"].astype(x.dtype)
+    shp = x.shape
+    xt = x.reshape(-1, shp[-1])
+    t, d = xt.shape
+    d_ff = w1.shape[1]
+    be = backend
+    if be == "pallas" and (t % 128 or d % 256 or d_ff % 256):
+        be = "ref"
+    mm = lambda a, b: ops.matmul(a, b, cfg, backend=be).astype(x.dtype)
+    h = jax.nn.silu(mm(xt, w1)) * mm(xt, w3)
+    return mm(h, w2).reshape(shp)
 
 
 # --------------------------------------------------------------------------
@@ -413,6 +432,40 @@ def moe_init(key, cfg: ModelConfig):
         p["shared"] = ffn_init(ks2[0], d, sf)
         p["shared_gate"] = dense_init(ks2[1], d, 1)
     return p
+
+
+def moe_default_capacity(t: int, e: int, k: int) -> int:
+    """The moe() default per-expert capacity (factor 1.5, floor 8, clamped
+    to the token count).  Shared by tune.warm and benchmarks/moe.py so
+    warmed/modeled kernel specs match the geometry the layer dispatches."""
+    return min(t, max(8, int(1.5 * k * t / e)))
+
+
+def moe_expert_ffn(xe, w1, w3, w2, comb, cfg: ModelConfig):
+    """Per-expert gate/up/down over the padded dispatch buffer, scaled by
+    the combine weights: xe (E,C,d), w1/w3 (E,d,F), w2 (E,F,d), comb (E,C)
+    -> (E,C,d) float32.
+
+    cfg.moe_backend="pallas" dispatches the fused grouped-expert kernel
+    (kernels/moe_ffn.py) with the EXPERT axis as the coarsening axis
+    (cfg.moe_ffn_cfg resolved through repro.tune for "auto"); the einsum
+    chain below is the oracle the kernel is tested against and the
+    automatic fallback for degrees the expert count can't tile.
+    """
+    e, c, d = xe.shape
+    f = w1.shape[-1]
+    if cfg.moe_backend == "pallas":
+        from repro.kernels import ops
+        rcfg = ops.resolve_cfg(cfg.moe_ffn_cfg, "moe_ffn", (e, c, d, f),
+                               dtype=xe.dtype.name, backend="pallas")
+        # an explicit degree the expert axis can't tile falls back too
+        if e % rcfg.degree == 0:
+            return ops.moe_ffn(xe, w1.astype(xe.dtype), w3.astype(xe.dtype),
+                               w2.astype(xe.dtype), comb, rcfg)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1.astype(xe.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3.astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, w2.astype(xe.dtype))
+    return (ye * comb[..., None].astype(ye.dtype)).astype(jnp.float32)
 
 
 def moe(p, x, cfg: ModelConfig, *, capacity: int | None = None,
@@ -451,7 +504,7 @@ def moe(p, x, cfg: ModelConfig, *, capacity: int | None = None,
     pmean = probs.mean(axis=0)
     aux = e * jnp.sum(f * pmean)
 
-    cap = capacity if capacity is not None else max(8, int(1.5 * k * t / e))
+    cap = capacity if capacity is not None else moe_default_capacity(t, e, k)
     cap = min(cap, t)
     # per-expert token weights (E_pad, T) — shardable on E (model axis)
     tokw = jnp.einsum("tke,tk->et", onehot, w)
@@ -461,19 +514,19 @@ def moe(p, x, cfg: ModelConfig, *, capacity: int | None = None,
     xe = jnp.take(xt, topi.reshape(-1), axis=0).reshape(e_pad, cap, d)
     xe = xe * live[..., None]
     xe = shard.constrain(xe, lambda P, c: P(c.tp, None, None))
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(xe.dtype)))
-    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
-    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xe.dtype))
-    ye = ye * (topw * live)[..., None].astype(ye.dtype)
-    y = jnp.zeros((t, d), dtype=jnp.float32).at[topi.reshape(-1)].add(
-        ye.reshape(-1, d).astype(jnp.float32))
+    ye = moe_expert_ffn(xe, p["w1"], p["w3"], p["w2"], topw * live, cfg)
+    # combine-scatter in cfg.moe_combine_dtype (bf16 halves the accumulator
+    # traffic, mirroring the EP psum wire saving on the shardmap path)
+    cdt = jnp.dtype(cfg.moe_combine_dtype)
+    y = jnp.zeros((t, d), dtype=cdt).at[topi.reshape(-1)].add(
+        ye.reshape(-1, d).astype(cdt))
     y = y.astype(x.dtype)
     y = shard.constrain(y, lambda P, c: P(c.dp, None))
 
     if cfg.n_shared_experts:
         gate = jax.nn.sigmoid((xt @ p["shared_gate"].astype(xt.dtype))
                               .astype(jnp.float32)).astype(x.dtype)
-        y = y + ffn(p["shared"], xt) * gate
+        y = y + ffn(p["shared"], xt, backend=cfg.ffn_backend) * gate
     return y.reshape(b, s, d), aux
 
 
@@ -512,7 +565,7 @@ def _moe_shardmap(p, x, cfg: ModelConfig, *, capacity, renorm,
             aux = lax.pmean(aux, ax)
 
         cap = capacity if capacity is not None \
-            else max(8, int(1.5 * k * t_l / e))
+            else moe_default_capacity(t_l, e, k)
         cap = min(cap, t_l)
         j = lax.axis_index(tp_axis)
         ids_local = j * e_l + jnp.arange(e_l)              # global expert ids
@@ -522,12 +575,9 @@ def _moe_shardmap(p, x, cfg: ModelConfig, *, capacity, renorm,
         live = (topw > 0.0)
         xe = jnp.take(xt_l, topi.reshape(-1), axis=0).reshape(e_l, cap, d)
         xe = xe * live[..., None]
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1_l.astype(xe.dtype)))
-        h = h * jnp.einsum("ecd,edf->ecf", xe, w3_l.astype(xe.dtype))
-        ye = jnp.einsum("ecf,efd->ecd", h, w2_l.astype(xe.dtype))
-        ye = ye * (topw * live)[..., None].astype(ye.dtype)
+        ye = moe_expert_ffn(xe, w1_l, w3_l, w2_l, topw * live, cfg)
         y_l = jnp.zeros((t_l, d), jnp.float32).at[topi.reshape(-1)].add(
-            ye.reshape(-1, d).astype(jnp.float32))
+            ye.reshape(-1, d))
         # combine experts across the EP axis; bf16 halves the wire (§Perf)
         y_l = lax.psum(y_l.astype(jnp.dtype(cfg.moe_combine_dtype)), tp_axis)
         return y_l.astype(xt_l.dtype), aux
@@ -543,5 +593,5 @@ def _moe_shardmap(p, x, cfg: ModelConfig, *, capacity, renorm,
     if cfg.n_shared_experts:
         gate = jax.nn.sigmoid((xt @ p["shared_gate"].astype(xt.dtype))
                               .astype(jnp.float32)).astype(x.dtype)
-        y = y + ffn(p["shared"], xt) * gate
+        y = y + ffn(p["shared"], xt, backend=cfg.ffn_backend) * gate
     return y.reshape(b, s, d), aux

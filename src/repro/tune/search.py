@@ -167,6 +167,14 @@ def enumerate_candidates(spec: KernelSpec,
             for kind, deg in _kind_degree_pairs(degrees):
                 if s % (bkv * deg) == 0:
                     out.append(CoarseningConfig(kind, deg))
+    elif fam == "moe_ffn":
+        e, cap, d, f = spec.shape
+        # expert-axis coarsening: each program owns `degree` whole experts,
+        # so the degree must divide the padded expert count.  Replication
+        # and SIMD are not implemented by the kernel -> excluded.
+        for kind, deg in _kind_degree_pairs(degrees):
+            if e % deg == 0:
+                out.append(CoarseningConfig(kind, deg))
     elif fam == "ssd":
         b, h, g, s, pp, nn = spec.shape
         chunk = p.get("chunk", 64)
@@ -269,6 +277,11 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
         return analysis.decode_attention_cost(
             b, h, hkv, s, d, cfg, bkv=p.get("bkv", 128),
             kv_len=p.get("kv_len", None), dtype_bytes=dtb).modeled_s
+
+    if fam == "moe_ffn":
+        e, cap, d, f = spec.shape
+        return analysis.moe_ffn_cost(e, cap, d, f, cfg,
+                                     dtype_bytes=dtb).modeled_s
 
     if fam == "ssd":
         b, h, g, s, pp, nn = spec.shape

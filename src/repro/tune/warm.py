@@ -69,6 +69,24 @@ def warm_for_model(cfg, *, seq: int, batch: int,
             (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
             dtype="bfloat16", bkv=min(128, seq), window=0),
     }
+    if cfg.n_experts:
+        # grouped-expert fused FFN over the padded dispatch buffer, at the
+        # exact capacity the layer dispatches
+        from repro.models.layers import moe_default_capacity
+        cap = moe_default_capacity(toks, cfg.n_experts, cfg.top_k)
+        specs["moe_ffn"] = KernelSpec.make(
+            "moe_ffn", (cfg.n_experts_padded, cap, d, cfg.moe_d_ff),
+            dtype="bfloat16")
+        # the decode step dispatches at its own (much smaller) capacity:
+        # blocks.attn_block_decode passes max(4, min(B, 4*top_k)) and
+        # layers.moe clamps it to the step's B tokens — a distinct spec
+        # key, warmed too so the serve hot loop's first token never
+        # searches inline
+        cap_dec = min(batch, max(4, min(batch, 4 * cfg.top_k)))
+        if cap_dec != cap:
+            specs["moe_ffn_decode"] = KernelSpec.make(
+                "moe_ffn", (cfg.n_experts_padded, cap_dec, d, cfg.moe_d_ff),
+                dtype="bfloat16")
     if cfg.window:
         # mixed global/local stacks dispatch two param sets — warm both
         specs["decode_attention_local"] = KernelSpec.make(
@@ -151,6 +169,15 @@ def wall_measurer(reps: int = 3):
             fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
                                               bkv=p.get("bkv", 128),
                                               window=w)
+        elif spec.family == "moe_ffn":
+            e, cap, d, f = spec.shape
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            xe = jax.random.normal(key, (e, cap, d), dt)
+            w1 = jax.random.normal(jax.random.fold_in(key, 1), (e, d, f), dt)
+            w3 = jax.random.normal(jax.random.fold_in(key, 2), (e, d, f), dt)
+            w2 = jax.random.normal(jax.random.fold_in(key, 3), (e, f, d), dt)
+            wts = jax.random.uniform(jax.random.fold_in(key, 4), (e, cap))
+            fn = lambda: ops.moe_ffn(xe, w1, w3, w2, wts, cfg)
         elif spec.family == "embed_gather":
             n_ids, vocab, d = spec.shape
             ids = jax.random.randint(key, (n_ids,), 0, vocab)
