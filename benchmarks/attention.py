@@ -1,0 +1,128 @@
+"""Training-attention table: the pure-jnp mea baseline vs the coarsened
+custom-VJP flash kernel at fixed degrees vs AUTO, across sequence lengths,
+for both the forward and the full fwd·bwd (training) step.
+
+For each sequence length S emit a ``fwd`` and a ``fwdbwd`` row group:
+
+  mea            the XLA chunked-flash baseline (models/layers.mea_attention):
+                 the per-chunk (p, m, l, acc) carry round-trips HBM between
+                 scan steps, and the backward jax.checkpoint-recomputes the
+                 forward with f32 probability round trips
+  con1/2/4/8     the Pallas kernel at fixed consecutive degrees — the fwd
+                 row coarsens the q-row axis, the fwdbwd row additionally
+                 coarsens the backward dK/dV pass on the KV-BLOCK axis at
+                 the same degree
+  AUTO           the repro.tune picks over the full (kind, degree) spaces —
+                 forward and backward resolved INDEPENDENTLY through their
+                 own families, summed for the fwdbwd row
+
+`derived` is the modeled v5e time (core/analysis.flash_attention_cost +
+flash_attention_bwd_cost); `us_per_call` is CPU interpret wall time at a
+reduced geometry (transparency only).  The acceptance bar: at least one
+coarsened degree beats mea on the fwdbwd row at every S, and AUTO matches
+or beats every fixed degree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoarseningConfig
+from repro.core.analysis import flash_attention_cost, flash_attention_bwd_cost
+from repro.kernels import ops
+from repro.models.layers import mea_attention
+from repro.tune import KernelSpec, search
+from benchmarks.common import wall_us, emit
+
+# modeled (paper-scale) geometry
+B, HKV, G, D, BQ, BKV = 8, 4, 4, 128, 128, 128
+H = HKV * G
+# measured (CPU interpret) geometry
+MB, MHKV, MG, MD, MBQ, MBKV = 1, 2, 2, 32, 64, 64
+MH = MHKV * MG
+LENGTHS = (512, 1024, 2048, 4096)
+DEGREES = (1, 2, 4, 8)
+
+
+def _operands(s):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (MB, MH, s, MD), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (MB, MHKV, s, MD), jnp.float32) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (MB, MHKV, s, MD), jnp.float32)
+    return q, k, v
+
+
+def _measured(s, cfg, bwd_cfg, grad: bool):
+    """CPU interpret wall time; cfg=None times the mea baseline."""
+    q, k, v = _operands(s)
+    if cfg is None:
+        # mea takes the (B,S,H,D) model layout
+        qm, km, vm = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+        f = jax.jit(lambda a, b, c: jnp.sum(mea_attention(a, b, c,
+                                                          causal=True)))
+        fn = (jax.jit(jax.grad(f, argnums=(0, 1, 2))) if grad else f)
+        return wall_us(lambda: fn(qm, km, vm))
+    if s % (MBQ * cfg.degree) or s % (MBKV * bwd_cfg.degree):
+        return -1.0
+    f = jax.jit(lambda a, b, c: jnp.sum(ops.flash_attention(
+        a, b, c, cfg, bwd_cfg=bwd_cfg, bq=MBQ, bkv=MBKV, causal=True)))
+    fn = (jax.jit(jax.grad(f, argnums=(0, 1, 2))) if grad else f)
+    return wall_us(lambda: fn(q, k, v))
+
+
+def main() -> None:
+    for s in LENGTHS:
+        measurable = s <= 512
+        dense_f = flash_attention_cost(B, H, HKV, s, s, D, CoarseningConfig(),
+                                       bq=BQ, bkv=BKV, dense=True)
+        dense_b = flash_attention_bwd_cost(B, H, HKV, s, s, D,
+                                           CoarseningConfig(), bq=BQ,
+                                           bkv=BKV, dense=True)
+        dense_fb = dense_f.modeled_s + dense_b.modeled_s
+        emit(f"attn,S{s},fwd,mea",
+             _measured(s, None, None, False) if measurable else -1.0,
+             dense_f.modeled_s * 1e6, speedup=1.0)
+        emit(f"attn,S{s},fwdbwd,mea",
+             _measured(s, None, None, True) if measurable else -1.0,
+             dense_fb * 1e6, speedup=1.0)
+        for deg in DEGREES:
+            if s % (BQ * deg) or s % (BKV * deg):
+                emit(f"attn,S{s},fwd,con{deg}", -1, -1, status="NA")
+                emit(f"attn,S{s},fwdbwd,con{deg}", -1, -1, status="NA")
+                continue
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            cf = flash_attention_cost(B, H, HKV, s, s, D, cfg, bq=BQ, bkv=BKV)
+            cb = flash_attention_bwd_cost(B, H, HKV, s, s, D, cfg,
+                                          q_cfg=cfg, bq=BQ, bkv=BKV)
+            emit(f"attn,S{s},fwd,con{deg}",
+                 _measured(s, cfg, CoarseningConfig(), False)
+                 if measurable else -1.0,
+                 cf.modeled_s * 1e6,
+                 speedup=round(dense_f.modeled_s / cf.modeled_s, 2))
+            fb = cf.modeled_s + cb.modeled_s
+            emit(f"attn,S{s},fwdbwd,con{deg}",
+                 _measured(s, cfg, cfg, True) if measurable else -1.0,
+                 fb * 1e6, speedup=round(dense_fb / fb, 2))
+        # AUTO: forward and backward tuned independently (different axes)
+        spec_f = KernelSpec.make("flash_attention", (B, H, HKV, s, s, D),
+                                 dtype="bfloat16", bq=BQ, bkv=BKV,
+                                 causal=True)
+        spec_b = KernelSpec.make("flash_attention_bwd", (B, H, HKV, s, s, D),
+                                 dtype="bfloat16", bq=BQ, bkv=BKV,
+                                 causal=True)
+        best_f, best_b = search(spec_f).best, search(spec_b).best
+        cf = flash_attention_cost(B, H, HKV, s, s, D, best_f, bq=BQ, bkv=BKV)
+        emit(f"attn,S{s},fwd,AUTO[{best_f.label}]", -1.0,
+             cf.modeled_s * 1e6,
+             speedup=round(dense_f.modeled_s / cf.modeled_s, 2))
+        cb = flash_attention_bwd_cost(B, H, HKV, s, s, D, best_b,
+                                      q_cfg=best_f, bq=BQ, bkv=BKV)
+        fb = cf.modeled_s + cb.modeled_s
+        emit(f"attn,S{s},fwdbwd,AUTO[{best_f.label}/{best_b.label}]", -1.0,
+             fb * 1e6, speedup=round(dense_fb / fb, 2))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ Tables (one per paper figure):
   tuned  — autotuner pick vs base vs the paper's fixed degrees
   decode — dense einsum baseline vs coarsened split-KV decode attention
   moe    — unfused einsum baseline vs the fused grouped-expert MoE FFN
+  attention — mea baseline vs the custom-VJP coarsened flash kernel
+              (fwd and fwd·bwd rows; fwd/bwd degrees tuned independently)
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -28,7 +30,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline, tuned, decode, moe)
+                        roofline, tuned, decode, moe, attention)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -42,6 +44,7 @@ TABLES = {
     "tuned": tuned.main,
     "decode": decode.main,
     "moe": moe.main,
+    "attention": attention.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

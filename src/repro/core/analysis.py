@@ -233,6 +233,150 @@ def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
     )
 
 
+def flash_attention_cost(b: int, h: int, hkv: int, sq: int, sk: int, d: int,
+                         cfg: CoarseningConfig, *, bq: int = 128,
+                         bkv: int = 128, causal: bool = True,
+                         dtype_bytes: int = 2,
+                         dense: bool = False) -> KernelCost:
+    """Coarsened flash-attention FORWARD (q-row-block coarsening).
+
+    Each program owns C q blocks and sweeps the kv blocks once, so the kv
+    traffic (and the per-block DMA issue overhead) divides by C — up to the
+    causal skew: a consecutive program walks to its *max* fused row (keeping
+    ~half the triangle pruned), a gapped program's fused rows span the whole
+    sequence so it walks everything (the divergence penalty).
+
+    dense=True models the pure-jnp chunked (mea) baseline: the same
+    online-softmax math lowered through XLA, whose per-kv-chunk
+    (p, m, l, acc) carry round-trips HBM in f32 between scan iterations —
+    traffic the fused kernel keeps in VMEM.
+    """
+    c = 1 if dense else cfg.degree
+    gapped = (not dense) and cfg.kind == KIND_GAPPED
+    nq = max(1, sq // (c * bq))
+    nk = max(1, sk // bkv)
+    if causal and not gapped:
+        # program i's fused rows end at (i+1)*c*bq: walk only kv blocks
+        # at or before them
+        steps = sum(min(nk, -(-((i + 1) * c * bq) // bkv)) for i in range(nq))
+    else:
+        steps = nq * nk
+    descs = c if gapped else 1
+    kv_dma_s = 2 * _dma_time(bkv * d * dtype_bytes, 1)          # K + V panes
+    if dense:
+        # per-step f32 carry round trip (write + read descriptors)
+        carry_bytes = (bq * bkv + bq * (d + 2)) * 4.0
+        kv_dma_s += _dma_time(carry_bytes, 2)
+    flops = 4.0 * c * bq * bkv * d                               # qk + pv
+    rate = MXU_FLOPS_BF16 if dtype_bytes == 2 else MXU_FLOPS_F32
+    eff = min(1.0, c * bq / 128) * min(1.0, min(bkv, d) / 128)
+    compute_s = flops / (rate * eff)
+    # per-program q pane in + o pane out (f32); consecutive = 1 wide DMA,
+    # gapped = C strided DMAs (the narrow-LSU analog)
+    prog_s = (_dma_time(c * bq * d * dtype_bytes / descs, descs)
+              + _dma_time(c * bq * d * 4.0 / descs, descs))
+    step = max(kv_dma_s, compute_s)
+    grid = b * h * steps
+    total = b * h * nq * prog_s + (kv_dma_s + compute_s) \
+        + step * max(0, grid - 1)
+    vmem = 2 * int((c * bq + 2 * bkv) * d) * dtype_bytes \
+        + 2 * int(c * bq * (d + 2)) * 4
+    return KernelCost(
+        label="dense" if dense else cfg.label, grid=grid,
+        dmas_per_step=2 + 2 * descs, dma_bytes=bkv * d * dtype_bytes,
+        vmem_bytes=vmem, dma_sems=2 + 2 * descs,
+        dma_s_per_step=kv_dma_s, compute_s_per_step=compute_s,
+        modeled_s=total,
+        bound="memory" if kv_dma_s >= compute_s else "compute",
+    )
+
+
+def flash_attention_bwd_cost(b: int, h: int, hkv: int, sq: int, sk: int,
+                             d: int, cfg: CoarseningConfig, *,
+                             q_cfg: CoarseningConfig | None = None,
+                             bq: int = 128, bkv: int = 128,
+                             causal: bool = True, dtype_bytes: int = 2,
+                             dense: bool = False) -> KernelCost:
+    """Flash-attention BACKWARD: the dK/dV pass with the KV-BLOCK axis as
+    the coarsening axis (``cfg``) plus the dQ pass coarsened on the q-row
+    axis (``q_cfg``, defaults base) — the axes differ, which is why the
+    ``flash_attention_bwd`` tuner family is independent of the forward's.
+
+    A dK/dV program owns C kv blocks: consecutive = one wide recompute tile
+    (and one wide K/V/dK/dV pane each), gapped = C strided panes and — since
+    segment-0 kv rows are fused into every program — a causal sweep that
+    degenerates to the worst row (the decode kernel's divergence framing).
+
+    dense=True models the mea/XLA baseline backward: jax.checkpoint
+    recomputes the forward inside one combined sweep (higher flops) and the
+    recomputed probability / dS chunk blocks round-trip HBM in f32.
+    """
+    rate = MXU_FLOPS_BF16 if dtype_bytes == 2 else MXU_FLOPS_F32
+
+    # ---- dK/dV pass (or the single combined dense sweep) ----
+    c = 1 if dense else cfg.degree
+    gapped = (not dense) and cfg.kind == KIND_GAPPED
+    nkv = max(1, sk // (c * bkv))
+    nq = max(1, sq // bq)
+    if causal and not gapped:
+        # program ki's fused kv rows start at ki*c*bkv: only q blocks at or
+        # after them contribute
+        steps = sum(nq - (ki * c * bkv) // bq for ki in range(nkv))
+    else:
+        steps = nkv * nq
+    descs = c if gapped else 1
+    # per q step: q + do panes in, (m, l, delta) residual rows
+    qstep_s = 2 * _dma_time(bq * d * dtype_bytes, 1) + _dma_time(bq * 4.0, 3)
+    if dense:
+        # recomputed p and dS chunk blocks, written then re-read in f32
+        qstep_s += _dma_time(2 * bq * bkv * 4.0, 4)
+        flops = 12.0 * bq * bkv * d          # fwd recompute + dq + dk + dv
+    else:
+        flops = 8.0 * bq * (c * bkv) * d     # s, dv, dp, dk on the wide tile
+    eff = min(1.0, bq / 128) * min(1.0, min(c * bkv, d) / 128)
+    compute_s = flops / (rate * eff)
+    # per program: K + V panes in, dK + dV panes out (f32)
+    prog_s = 2 * _dma_time(c * bkv * d * dtype_bytes / descs, descs) \
+        + 2 * _dma_time(c * bkv * d * 4.0 / descs, descs)
+    step = max(qstep_s, compute_s)
+    grid = b * h * steps
+    total = b * h * nkv * prog_s + (qstep_s + compute_s) \
+        + step * max(0, grid - 1)
+
+    # ---- dQ pass (kernel path only: dense folds it into the sweep) ----
+    if not dense:
+        qc_cfg = q_cfg or CoarseningConfig()
+        qc = qc_cfg.degree
+        qgapped = qc_cfg.kind == KIND_GAPPED
+        nq2 = max(1, sq // (qc * bq))
+        nk2 = max(1, sk // bkv)
+        if causal and not qgapped:
+            steps2 = sum(min(nk2, -(-((i + 1) * qc * bq) // bkv))
+                         for i in range(nq2))
+        else:
+            steps2 = nq2 * nk2
+        descs2 = qc if qgapped else 1
+        kv2_s = 2 * _dma_time(bkv * d * dtype_bytes, 1)
+        flops2 = 6.0 * qc * bq * bkv * d     # s, dp, dq
+        eff2 = min(1.0, qc * bq / 128) * min(1.0, min(bkv, d) / 128)
+        compute2_s = flops2 / (rate * eff2)
+        prog2_s = (2 * _dma_time(qc * bq * d * dtype_bytes / descs2, descs2)
+                   + _dma_time(qc * bq * d * 4.0 / descs2, descs2))
+        total += b * h * nq2 * prog2_s \
+            + max(kv2_s, compute2_s) * b * h * steps2
+
+    vmem = 2 * int((2 * c * bkv + 2 * bq) * d) * dtype_bytes \
+        + 2 * int(2 * c * bkv * d) * 4
+    return KernelCost(
+        label="dense" if dense else cfg.label, grid=grid,
+        dmas_per_step=2 + 4 * descs, dma_bytes=c * bkv * d * dtype_bytes / descs,
+        vmem_bytes=vmem, dma_sems=2 + 4 * descs,
+        dma_s_per_step=qstep_s, compute_s_per_step=compute_s,
+        modeled_s=total,
+        bound="memory" if qstep_s >= compute_s else "compute",
+    )
+
+
 def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
                           cfg: CoarseningConfig, *, bkv: int = 128,
                           kv_len: int | None = None, dtype_bytes: int = 2,

@@ -128,22 +128,101 @@ def dp_scan(cost, cfg: CoarseningConfig | str = BASE):
 
 
 @functools.lru_cache(maxsize=256)
-def _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend):
-    if backend == "ref":
-        return jax.jit(functools.partial(ref.attention, causal=causal,
-                                         window=window))
-    return jax.jit(_flash.make_kernel(b, h, hkv, s, d, cfg, bq=bq, bkv=bkv,
-                                      causal=causal, window=window))
+def _flash_vjp_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv, causal,
+                  window, scale, dtype_name):
+    """Custom-VJP flash attention for one geometry: the VJP forward saves
+    the (o, m, l) online-softmax residuals; the backward runs the dK/dV
+    kernel coarsened on the KV-BLOCK axis (``bwd_cfg``) and the dQ kernel
+    coarsened on the q-row axis matching the forward (``cfg``) —
+    independent degrees, since the two passes stream different axes.
+
+    Forward-only calls stay pure-forward: the primal runs a residual-free
+    kernel (a pallas_call's outputs can't be DCE'd, so emitting m/l there
+    would write two dead (B,H,Sq) f32 arrays per call), and ``bwd_cfg``
+    may arrive unresolved ("auto") — the flash_attention_bwd family is
+    searched and the backward kernels built only when a backward trace
+    actually runs."""
+    fwd = _flash.make_kernel(b, h, hkv, sq, d, cfg, bq=bq, bkv=bkv,
+                             causal=causal, window=window, scale=scale,
+                             sk=sk)
+    fwd_res = _flash.make_kernel(b, h, hkv, sq, d, cfg, bq=bq, bkv=bkv,
+                                 causal=causal, window=window, scale=scale,
+                                 sk=sk, return_residuals=True)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd(q, k, v)
+
+    def attn_fwd(q, k, v):
+        from jax.ad_checkpoint import checkpoint_name
+        o, m, l = fwd_res(q, k, v)
+        # name ALL the kernel's outputs, not just o: the backward consumes
+        # (o, m, l), so a remat policy that saved o alone would still
+        # replay the whole pallas_call to rebuild m/l
+        o = checkpoint_name(o, "flash_attn_out")
+        m = checkpoint_name(m, "flash_attn_out")
+        l = checkpoint_name(l, "flash_attn_out")
+        return o, (q, k, v, o, m, l)
+
+    def attn_bwd(res, g):
+        rbwd = resolve_cfg(bwd_cfg, "flash_attention_bwd",
+                           (b, h, hkv, sq, sk, d), dtype=dtype_name,
+                           backend="pallas", bq=bq, bkv=bkv,
+                           causal=bool(causal))
+        bwd_dq = _flash.make_bwd_dq_kernel(b, h, hkv, sq, d, cfg, bq=bq,
+                                           bkv=bkv, causal=causal,
+                                           window=window, scale=scale, sk=sk)
+        bwd_dkv = _flash.make_bwd_dkv_kernel(b, h, hkv, sq, d, rbwd, bq=bq,
+                                             bkv=bkv, causal=causal,
+                                             window=window, scale=scale,
+                                             sk=sk)
+        q, k, v, o, m, l = res
+        g = g.astype(jnp.float32)
+        delta = jnp.sum(g * o, axis=-1)                # (B,H,Sq) f32
+        dq = bwd_dq(q, k, v, g, m, l, delta)
+        dk, dv = bwd_dkv(q, k, v, g, m, l, delta)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return jax.jit(attn)
+
+
+@functools.lru_cache(maxsize=256)
+def _flash_ref_fn(causal, window, scale):
+    return jax.jit(functools.partial(ref.attention, causal=causal,
+                                     window=window, scale=scale))
 
 
 def flash_attention(q, k, v, cfg: CoarseningConfig | str = BASE, *,
+                    bwd_cfg: CoarseningConfig | str | None = None,
                     bq: int = 128, bkv: int = 128, causal: bool = True,
-                    window: int | None = None, backend: str = "pallas"):
-    b, h, s, d = q.shape
-    hkv = k.shape[1]
-    cfg = resolve_cfg(cfg, "flash_attention", (b, h, hkv, s, d),
-                      dtype=q.dtype.name, backend=backend, bq=bq, bkv=bkv)
-    return _flash_fn(b, h, hkv, s, d, cfg, bq, bkv, causal, window, backend)(q, k, v)
+                    window: int | None = None, scale: float | None = None,
+                    backend: str = "pallas"):
+    """Differentiable coarsened flash attention.  q: (B,H,Sq,D);
+    k, v: (B,Hkv,Sk,D) -> (B,H,Sq,D) f32.
+
+    ``cfg`` coarsens the forward (and the dQ backward pass) on the q-row
+    axis; ``bwd_cfg`` (default "auto" through the ``flash_attention_bwd``
+    tuner family) coarsens the dK/dV backward pass on the kv-block axis.
+    ``scale`` overrides the default 1/sqrt(D) logit scaling.
+    """
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if backend == "ref":
+        return _flash_ref_fn(causal, window, scale)(q, k, v)
+    cfg = resolve_cfg(cfg, "flash_attention", (b, h, hkv, sq, sk, d),
+                      dtype=q.dtype.name, backend=backend, bq=bq, bkv=bkv,
+                      causal=bool(causal))
+    if bwd_cfg is None:
+        bwd_cfg = "auto"
+    # bwd_cfg stays unresolved here: forward-only callers must not pay a
+    # flash_attention_bwd search (or a cache write) they never use — the
+    # VJP rule resolves it when a backward trace happens
+    if isinstance(bwd_cfg, str):
+        bwd_cfg = bwd_cfg if bwd_cfg == "auto" \
+            else CoarseningConfig.parse(bwd_cfg)
+    return _flash_vjp_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv,
+                         causal, window, scale, q.dtype.name)(q, k, v)
 
 
 @functools.lru_cache(maxsize=256)

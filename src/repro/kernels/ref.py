@@ -74,9 +74,10 @@ def dp_scan(cost: jax.Array) -> jax.Array:
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
               window: int | None = None, scale: float | None = None) -> jax.Array:
-    """(B,H,S,D) x (B,Hkv,S,D) GQA attention oracle."""
+    """(B,H,Sq,D) x (B,Hkv,Sk,D) GQA attention oracle (Sk may differ from Sq
+    for the non-causal cross-attention case)."""
     b, h, s, d = q.shape
-    hkv = k.shape[1]
+    hkv, sk = k.shape[1], k.shape[2]
     if hkv != h:
         rep = h // hkv
         k = jnp.repeat(k, rep, axis=1)
@@ -85,8 +86,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     qi = jnp.arange(s)[:, None]
-    ki = jnp.arange(s)[None, :]
-    mask = jnp.ones((s, s), dtype=bool)
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), dtype=bool)
     if causal:
         mask &= ki <= qi
     if window is not None:

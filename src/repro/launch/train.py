@@ -44,10 +44,10 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
           fail_at_step: int | None = None, tune: str | None = None):
     if tune:
         # pre-tune the ops-level kernel families at this run's geometry so
-        # any cfg="auto" dispatch (benchmarks, examples, custom step fns)
-        # resolves from the persisted cache instead of searching.  The
-        # standard train step itself lowers through kernels.ref/XLA, so
-        # this warms the cache rather than changing the step below.
+        # any cfg="auto" dispatch resolves from the persisted cache instead
+        # of searching — including the flash_attention/-_bwd pair the train
+        # step itself hits when cfg.attn_backend="pallas" (the forward and
+        # the dK/dV backward coarsen different axes, so both are warmed).
         from repro.tune import warm_from_flag
         warm_from_flag(cfg, tune, seq=seq, batch=batch)
     mesh = mesh or make_mesh_for_host()
@@ -148,11 +148,19 @@ def main():
     from repro.tune import TUNE_CHOICES
     ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
                     help="warm the coarsening tuning cache before training")
+    ap.add_argument("--attn-backend", default=None, choices=["ref", "pallas"],
+                    help="training attention dispatch: 'pallas' routes the "
+                         "blocks through the coarsened custom-VJP flash "
+                         "kernel (attn_cfg/attn_bwd_cfg from the tuning "
+                         "cache --tune warms)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.attn_backend:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
     losses, _ = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                       ckpt_dir=args.ckpt_dir, n_micro=args.n_micro,
                       remat=args.remat, lr=args.lr,

@@ -35,14 +35,22 @@ def attn_block_init(key, cfg: ModelConfig):
     return p
 
 
+def _attn_kw(cfg: ModelConfig) -> dict:
+    """The flash-attention dispatch knobs every attention site forwards."""
+    return dict(backend=cfg.attn_backend, cfg=cfg.attn_cfg,
+                bwd_cfg=cfg.attn_bwd_cfg, bq=cfg.attn_bq, bkv=cfg.attn_bkv)
+
+
 def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
-               shard: ShardCtx = NOSHARD, moe_capacity=None):
+               shard: ShardCtx = NOSHARD, moe_capacity=None,
+               pos_trivial: bool = False):
     window = cfg.window if kind == ATTN_LOCAL else None
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos, mrope_pos3=mrope_pos3)
     q = shard.constrain_heads(q, cfg.n_heads)
     k = shard.constrain_heads(k, cfg.n_kv_heads)
-    o = L.mea_attention(q, k, v, causal=True, window=window, q_pos=pos)
+    o = L.flash_attention(q, k, v, causal=True, window=window, q_pos=pos,
+                          pos_trivial=pos_trivial, **_attn_kw(cfg))
     o = o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -100,7 +108,10 @@ def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
         (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
     kc = cache["k"].at[bidx[:, None], pos].set(k_upd)
     vc = cache["v"].at[bidx[:, None], pos].set(v_upd)
-    o = L.mea_attention(q, kc, vc, causal=True, window=window, q_pos=pos)
+    # chunk rows sit at ragged global positions inside a padded cache: the
+    # dispatch always falls back to mea here (pos_trivial=False), by design
+    o = L.flash_attention(q, kc, vc, causal=True, window=window, q_pos=pos,
+                          **_attn_kw(cfg))
     o = o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -344,7 +355,8 @@ def enc_block_init(key, cfg: ModelConfig):
 def enc_block(p, x, cfg: ModelConfig, *, pos, shard: ShardCtx = NOSHARD):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
-    o = L.mea_attention(q, k, v, causal=False, q_pos=pos)
+    # non-causal: mask-free, so kernel eligibility needs no trivial-pos proof
+    o = L.flash_attention(q, k, v, causal=False, q_pos=pos, **_attn_kw(cfg))
     x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
@@ -365,7 +377,9 @@ def _cross_attention(p, x, enc_kv, cfg: ModelConfig):
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nq, hd)
     k, v = enc_kv
-    return L.mea_attention(q, k, v, causal=False).reshape(b, s, -1) \
+    # non-causal cross attention: the kernel serves Sq != Sk geometries
+    return L.flash_attention(q, k, v, causal=False,
+                             **_attn_kw(cfg)).reshape(b, s, -1) \
         @ p["wo"].astype(x.dtype)
 
 
@@ -377,10 +391,12 @@ def enc_kv(p, enc_out, cfg: ModelConfig):
 
 
 def dec_block(p, x, cfg: ModelConfig, *, pos, enc_out,
-              shard: ShardCtx = NOSHARD, enc_kv_pre=None):
+              shard: ShardCtx = NOSHARD, enc_kv_pre=None,
+              pos_trivial: bool = False):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
-    o = L.mea_attention(q, k, v, causal=True, q_pos=pos)
+    o = L.flash_attention(q, k, v, causal=True, q_pos=pos,
+                          pos_trivial=pos_trivial, **_attn_kw(cfg))
     x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     kv = enc_kv_pre if enc_kv_pre is not None \
@@ -401,7 +417,10 @@ def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
     bidx = jnp.arange(b)
     kc = cache["k"].at[bidx[:, None], pos].set(k.astype(cache["k"].dtype))
     vc = cache["v"].at[bidx[:, None], pos].set(v.astype(cache["v"].dtype))
-    o = L.mea_attention(q, kc, vc, causal=True, q_pos=pos)
+    # ragged chunk positions against the padded cache: mea fallback, as in
+    # attn_block_prefill
+    o = L.flash_attention(q, kc, vc, causal=True, q_pos=pos,
+                          **_attn_kw(cfg))
     x = x + o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,

@@ -87,6 +87,20 @@ class ModelConfig:
     # kernel, cfg="auto" through repro.tune)
     ffn_backend: str = "ref"
 
+    # training/prefill attention dispatch: "ref" = the pure-jnp chunked
+    # mea_attention (the CPU/test oracle), "pallas" = the coarsened flash
+    # kernel with a custom VJP (kernels/flash_attention.py).  attn_cfg
+    # coarsens the FORWARD (and the backward dQ pass) on the q-row axis;
+    # attn_bwd_cfg coarsens the backward dK/dV pass on the kv-block axis —
+    # independent degrees, since the two passes stream different axes.
+    # Both accept a spec label or "auto" (repro.tune).  Ragged q_pos /
+    # k_len / untileable geometries fall back to mea_attention.
+    attn_backend: str = "ref"
+    attn_cfg: str = "auto"
+    attn_bwd_cfg: str = "auto"
+    attn_bq: int = 128
+    attn_bkv: int = 128
+
     # ---- derived ----
     @property
     def vocab_padded(self) -> int:

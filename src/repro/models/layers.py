@@ -220,10 +220,10 @@ def mea_attention(q, k, v, *, causal=True, window=None, q_pos=None,
     vf = padto(vf, nk * kv_chunk, 1)
 
     kpos = jnp.arange(nk * kv_chunk, dtype=jnp.int32)
-    valid_k = kpos < (sk if k_len is None else k_len)    # () or (B,)? k_len scalar
     if k_len is not None and jnp.ndim(k_len) > 0:
         valid_k = kpos[None, :] < k_len[:, None]          # (B, Sk)
-    else:
+    else:                                                 # scalar or None
+        valid_k = kpos < (sk if k_len is None else k_len)
         valid_k = jnp.broadcast_to(valid_k[None], (b, nk * kv_chunk))
 
     qg = qg.reshape(b, nq, q_chunk, hkv, g, d)
@@ -276,6 +276,67 @@ def mea_attention(q, k, v, *, causal=True, window=None, q_pos=None,
                       (qg.transpose(1, 0, 2, 3, 4, 5), qp.transpose(1, 0, 2)))
     out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, d)
     return out[:, :sq].astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_pos=None,
+                    k_len=None, pos_trivial=False, scale=None,
+                    backend: str = "ref", cfg="auto", bwd_cfg="auto",
+                    bq: int = 128, bkv: int = 128):
+    """Training/prefill attention dispatch.  q: (B,Sq,H,D);
+    k, v: (B,Sk,Hkv,D) -> (B,Sq,H,D).
+
+    backend="pallas" dispatches the coarsened custom-VJP flash kernel
+    (kernels/flash_attention.py; cfg/bwd_cfg resolved through repro.tune
+    for "auto" — forward q-row axis and backward kv-block axis tune
+    independent degrees).  Everything the kernel cannot serve falls back to
+    ``mea_attention`` — which is also the parity oracle it is tested
+    against:
+
+      * causal/window masking needs Sq == Sk and statically trivial row
+        positions (``pos_trivial=True``: q row i IS global row i) — ragged
+        ``q_pos`` (chunked prefill, packed batches) falls back
+      * ``k_len`` (valid-prefix masking against a padded cache) falls back
+      * Sq/Sk must tile by the bq/bkv blocks (and the resolved degrees)
+
+    The kernel output is checkpoint-named "flash_attn_out" so the
+    remat="dots" policy saves it instead of re-running the whole Pallas
+    kernel in the backward.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    if backend == "pallas" and k_len is None:
+        blk_q, blk_k = min(bq, sq), min(bkv, sk)
+        ok = h % hkv == 0 and sq % blk_q == 0 and sk % blk_k == 0
+        if causal or window is not None:
+            ok = ok and sq == sk and pos_trivial
+        if ok:
+            from repro.core.coarsening import CoarseningConfig
+            from repro.kernels import ops
+            rcfg = ops.resolve_cfg(cfg, "flash_attention",
+                                   (b, h, hkv, sq, sk, d),
+                                   dtype=q.dtype.name, backend="pallas",
+                                   bq=blk_q, bkv=blk_k, causal=bool(causal))
+            # the bwd cfg stays "auto" (unresolved) on the default path:
+            # the family's legality guarantees a tileable pick and the
+            # flash_attention_bwd search only runs when a backward trace
+            # does — forward-only model calls (eval, enc, cross) pay
+            # nothing.  Only an EXPLICIT bwd label needs the degree guard.
+            rbwd = bwd_cfg if isinstance(bwd_cfg, str) and bwd_cfg == "auto" \
+                else (bwd_cfg if isinstance(bwd_cfg, CoarseningConfig)
+                      else CoarseningConfig.parse(bwd_cfg))
+            bwd_ok = rbwd == "auto" or sk % (blk_k * rbwd.degree) == 0
+            # an explicit degree the geometry can't tile falls back too
+            if sq % (blk_q * rcfg.degree) == 0 and bwd_ok:
+                o = ops.flash_attention(
+                    q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), rcfg, bwd_cfg=rbwd,
+                    bq=blk_q, bkv=blk_k, causal=causal, window=window,
+                    scale=scale)
+                from jax.ad_checkpoint import checkpoint_name
+                o = checkpoint_name(o, "flash_attn_out")
+                return o.transpose(0, 2, 1, 3).astype(q.dtype)
+    return mea_attention(q, k, v, causal=causal, window=window, q_pos=q_pos,
+                         k_len=k_len, scale=scale)
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,

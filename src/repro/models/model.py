@@ -43,11 +43,13 @@ def _block_init(kind: str, key, cfg: ModelConfig):
     raise ValueError(kind)
 
 
-def _block_apply(kind: str, p, x, cfg, *, pos, mrope_pos3, shard, moe_capacity):
+def _block_apply(kind: str, p, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
+                 pos_trivial=False):
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
         return B.attn_block(p, x, cfg, kind=kind, pos=pos,
                             mrope_pos3=mrope_pos3, shard=shard,
-                            moe_capacity=moe_capacity)
+                            moe_capacity=moe_capacity,
+                            pos_trivial=pos_trivial)
     if kind == RECURRENT:
         return B.rglru_block(p, x, cfg, shard=shard)
     if kind == SSM:
@@ -134,7 +136,7 @@ def _embed(params, tokens, cfg, batch):
 
 
 def _run_stack(params, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
-               remat: str = "none"):
+               remat: str = "none", pos_trivial: bool = False):
     period, n_periods, tail = _period(cfg)
 
     def period_body(carry, xs):
@@ -143,7 +145,8 @@ def _run_stack(params, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
         for j, kind in enumerate(period):
             x, a = _block_apply(kind, xs[j], x, cfg, pos=pos,
                                 mrope_pos3=mrope_pos3, shard=shard,
-                                moe_capacity=moe_capacity)
+                                moe_capacity=moe_capacity,
+                                pos_trivial=pos_trivial)
             aux = aux + a
         # Megatron-SP: residuals sequence-sharded on the TP axis between
         # blocks (shard.sp='model'); GSPMD then emits one RS+AG pair per
@@ -155,15 +158,23 @@ def _run_stack(params, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
     if remat == "full":
         body = jax.checkpoint(period_body, prevent_cse=False)
     elif remat == "dots":
+        # save the Pallas attention output ("flash_attn_out") alongside the
+        # dot products: the kernel is opaque to the dots policy, so without
+        # the name the WHOLE pallas_call would re-run in the backward —
+        # right before the backward kernels recompute from its residuals
         body = jax.checkpoint(
             period_body, prevent_cse=False,
-            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            policy=jax.checkpoint_policies.save_from_both_policies(
+                jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                jax.checkpoint_policies.save_only_these_names(
+                    "flash_attn_out")))
 
     (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                            tuple(params["blocks"]))
     for p_t, kind in zip(params["tail"], _period(cfg)[2]):
         x, a = _block_apply(kind, p_t, x, cfg, pos=pos, mrope_pos3=mrope_pos3,
-                            shard=shard, moe_capacity=moe_capacity)
+                            shard=shard, moe_capacity=moe_capacity,
+                            pos_trivial=pos_trivial)
         aux = aux + a
     return x, aux
 
@@ -179,6 +190,11 @@ def lm_apply(params, batch, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD,
     tokens = batch["tokens"]
     b, s = tokens.shape
     pos = batch.get("positions")
+    # statically-known trivial positions (row i IS global row i) are what
+    # lets the flash kernel's causal mask stand in for the q_pos mask;
+    # batches carrying explicit positions (packing, ragged starts) keep the
+    # mea path
+    pos_trivial = pos is None
     if pos is None:
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = _embed(params, tokens, cfg, batch)
@@ -188,7 +204,8 @@ def lm_apply(params, batch, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD,
         pos3 = pos3.transpose(1, 0, 2)      # batch convention (B,3,S)->(3,B,S)
     x, aux = _run_stack(params, x, cfg, pos=pos,
                         mrope_pos3=pos3, shard=shard,
-                        moe_capacity=moe_capacity, remat=remat)
+                        moe_capacity=moe_capacity, remat=remat,
+                        pos_trivial=pos_trivial)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     return x, aux
 
@@ -232,14 +249,15 @@ def _encdec_apply(params, batch, cfg, *, shard, moe_capacity, remat,
             p, kv = inp
             x, aux = carry
             x, a = B.dec_block(p, x, cfg, pos=pos, enc_out=enc_x,
-                               shard=shard, enc_kv_pre=kv)
+                               shard=shard, enc_kv_pre=kv, pos_trivial=True)
             return (x, aux + a), None
     else:
         scan_xs = xs
 
         def dec_body(carry, p):
             x, aux = carry
-            x, a = B.dec_block(p, x, cfg, pos=pos, enc_out=enc_x, shard=shard)
+            x, a = B.dec_block(p, x, cfg, pos=pos, enc_out=enc_x, shard=shard,
+                               pos_trivial=True)
             return (x, aux + a), None
 
     dec_fn = dec_body if remat == "none" else jax.checkpoint(dec_body,

@@ -19,7 +19,10 @@ from typing import Any, Optional
 
 from repro.core.coarsening import CoarseningConfig
 
-CACHE_VERSION = 1
+# v2: the flash_attention family moved to a (b, h, hkv, sq, sk, d) spec
+# shape and a dedicated attention cost model (core/analysis), and gained the
+# flash_attention_bwd sibling — v1 flash winners are stale.
+CACHE_VERSION = 2
 ENV_VAR = "REPRO_TUNE_CACHE"
 
 

@@ -151,11 +151,24 @@ def enumerate_candidates(spec: KernelSpec,
             if rows % (br * deg) == 0:
                 out.append(CoarseningConfig(kind, deg))
     elif fam == "flash_attention":
-        b, h, hkv, s, d = spec.shape
+        b, h, hkv, sq, sk, d = spec.shape
         bq, bkv = p.get("bq", 128), p.get("bkv", 128)
-        if s % bkv == 0:
+        # q-row-block coarsening: each program owns `degree` q blocks of bq
+        # rows and sweeps the kv blocks.  Replication and SIMD are not
+        # implemented by the kernel -> excluded from its space.
+        if sk % bkv == 0:
             for kind, deg in _kind_degree_pairs(degrees):
-                if s % (bq * deg) == 0:
+                if sq % (bq * deg) == 0:
+                    out.append(CoarseningConfig(kind, deg))
+    elif fam == "flash_attention_bwd":
+        b, h, hkv, sq, sk, d = spec.shape
+        bq, bkv = p.get("bq", 128), p.get("bkv", 128)
+        # the dK/dV pass coarsens the KV-BLOCK axis (each program owns
+        # `degree` kv blocks of bkv rows and sweeps q blocks) — a different
+        # axis from the forward, hence the independent family
+        if sq % bq == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if sk % (bkv * deg) == 0:
                     out.append(CoarseningConfig(kind, deg))
     elif fam == "decode_attention":
         b, h, hkv, s, d = spec.shape
@@ -265,12 +278,18 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
                                     dtype_bytes=dtb).modeled_s
 
     if fam == "flash_attention":
-        b, h, hkv, s, d = spec.shape
-        # row-block coarsening over query blocks behaves like matmul row
-        # fusion: (s x s) @ (s x d) per (batch, head)
-        c = analysis.matmul_cost(s, d, s, cfg, bm=p.get("bq", 128), bn=d,
-                                 bk=p.get("bkv", 128), dtype_bytes=dtb)
-        return c.modeled_s * b * h
+        b, h, hkv, sq, sk, d = spec.shape
+        return analysis.flash_attention_cost(
+            b, h, hkv, sq, sk, d, cfg, bq=p.get("bq", 128),
+            bkv=p.get("bkv", 128), causal=bool(p.get("causal", True)),
+            dtype_bytes=dtb).modeled_s
+
+    if fam == "flash_attention_bwd":
+        b, h, hkv, sq, sk, d = spec.shape
+        return analysis.flash_attention_bwd_cost(
+            b, h, hkv, sq, sk, d, cfg, bq=p.get("bq", 128),
+            bkv=p.get("bkv", 128), causal=bool(p.get("causal", True)),
+            dtype_bytes=dtb).modeled_s
 
     if fam == "decode_attention":
         b, h, hkv, s, d = spec.shape

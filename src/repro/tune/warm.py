@@ -68,6 +68,20 @@ def warm_for_model(cfg, *, seq: int, batch: int,
             "decode_attention",
             (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
             dtype="bfloat16", bkv=min(128, seq), window=0),
+        # training flash attention: the forward (q-row coarsening axis) and
+        # the backward dK/dV pass (kv-block coarsening axis) tune
+        # independent degrees — warm both so a cfg.attn_backend="pallas"
+        # train step's first forward AND first grad dispatch from the cache
+        "flash_attention": KernelSpec.make(
+            "flash_attention",
+            (batch, cfg.n_heads, cfg.n_kv_heads, seq, seq, cfg.hd),
+            dtype="bfloat16", bq=min(128, seq), bkv=min(128, seq),
+            causal=True),
+        "flash_attention_bwd": KernelSpec.make(
+            "flash_attention_bwd",
+            (batch, cfg.n_heads, cfg.n_kv_heads, seq, seq, cfg.hd),
+            dtype="bfloat16", bq=min(128, seq), bkv=min(128, seq),
+            causal=True),
     }
     if cfg.n_experts:
         # grouped-expert fused FFN over the padded dispatch buffer, at the
@@ -169,6 +183,30 @@ def wall_measurer(reps: int = 3):
             fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
                                               bkv=p.get("bkv", 128),
                                               window=w)
+        elif spec.family in ("flash_attention", "flash_attention_bwd"):
+            b, h, hkv, sq, sk, d = spec.shape
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            q = jax.random.normal(key, (b, h, sq, d), dt) * 0.5
+            kk = jax.random.normal(jax.random.fold_in(key, 1),
+                                   (b, hkv, sk, d), dt) * 0.5
+            vv = jax.random.normal(jax.random.fold_in(key, 2),
+                                   (b, hkv, sk, d), dt)
+            causal = bool(p.get("causal", True))
+            bq, bkv = p.get("bq", 128), p.get("bkv", 128)
+            if spec.family == "flash_attention":
+                fn = lambda: ops.flash_attention(
+                    q, kk, vv, cfg, bwd_cfg="auto", bq=bq, bkv=bkv,
+                    causal=causal)
+            else:
+                # time the backward the cfg controls: grad through the
+                # custom-VJP op at a base forward with bwd_cfg pinned
+                from repro.core.coarsening import CoarseningConfig
+                grad = jax.jit(jax.grad(
+                    lambda q_, k_, v_: jnp.sum(ops.flash_attention(
+                        q_, k_, v_, CoarseningConfig(), bwd_cfg=cfg,
+                        bq=bq, bkv=bkv, causal=causal)),
+                    argnums=(1, 2)))
+                fn = lambda: grad(q, kk, vv)
         elif spec.family == "moe_ffn":
             e, cap, d, f = spec.shape
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,24 @@
+"""Shared fixtures for the tuner-coupled test modules."""
+import importlib
+
+import pytest
+
+tune_cache = importlib.import_module("repro.tune.cache")
+
+
+@pytest.fixture
+def scratch_default_cache(tmp_path, monkeypatch):
+    """Point the process-wide default tuning cache at a scratch file and
+    wipe every in-process memo that could answer for it, so cfg="auto"
+    dispatch tests are isolated and repeatable."""
+    from repro.kernels import ops
+    monkeypatch.setenv(tune_cache.ENV_VAR, str(tmp_path / "auto.json"))
+
+    def wipe():
+        tune_cache._DEFAULT.clear()
+        ops._auto_cfg.cache_clear()
+        ops._flash_vjp_fn.cache_clear()
+
+    wipe()
+    yield str(tmp_path / "auto.json")
+    wipe()

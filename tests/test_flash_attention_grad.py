@@ -1,0 +1,355 @@
+"""Differentiable coarsened flash attention: jax.grad through the custom-VJP
+kernel vs jax.grad(mea_attention)/ref.attention across causal/window/GQA/
+degree sweeps (both coarsening axes), the scale satellite, the
+flash_attention_bwd tuner family, the models/layers dispatch wrapper with
+its fallback rules, and a train-step smoke at attn_backend="pallas"."""
+import dataclasses
+import importlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CoarseningConfig
+from repro.core.analysis import (flash_attention_cost,
+                                 flash_attention_bwd_cost)
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import model as M
+from repro.tune import KernelSpec, enumerate_candidates, model_cost, search
+
+tune_cache = importlib.import_module("repro.tune.cache")
+
+KEY = jax.random.PRNGKey(7)
+B, H, HKV, S, D = 1, 4, 2, 128, 16
+BQ = BKV = 32
+
+
+def _operands(hkv=HKV, s=S, sk=None, dtype=jnp.float32):
+    sk = sk or s
+    q = (jax.random.normal(KEY, (B, H, s, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (B, hkv, sk, D)) * 0.5).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2),
+                          (B, hkv, sk, D)).astype(dtype)
+    return q, k, v
+
+
+def _grads(fn, *args):
+    return jax.grad(lambda *a: jnp.sum(jnp.sin(fn(*a))),
+                    argnums=tuple(range(len(args))))(*args)
+
+
+def _assert_grad_parity(cfg, bwd_cfg, *, causal=True, window=None, hkv=HKV,
+                        sk=None, scale=None, atol=1e-4):
+    q, k, v = _operands(hkv=hkv, sk=sk)
+    want = _grads(lambda a, b, c: ref.attention(
+        a, b, c, causal=causal, window=window, scale=scale), q, k, v)
+    got = _grads(lambda a, b, c: ops.flash_attention(
+        a, b, c, CoarseningConfig.parse(cfg),
+        bwd_cfg=CoarseningConfig.parse(bwd_cfg), bq=BQ, bkv=BKV,
+        causal=causal, window=window, scale=scale), q, k, v)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-3, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# grad parity: coarsening on either axis merely redistributes work
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", ["none", "con2", "con4", "gap2", "gap4"])
+def test_grad_parity_fwd_degrees(cfg):
+    """Sweep the FORWARD (q-row axis) degree at a base backward."""
+    _assert_grad_parity(cfg, "none")
+
+
+@pytest.mark.parametrize("bwd", ["con2", "con4", "gap2", "gap4"])
+def test_grad_parity_bwd_degrees(bwd):
+    """Sweep the BACKWARD dK/dV (kv-block axis) degree — consecutive = one
+    wide recompute tile per program, gapped = strided."""
+    _assert_grad_parity("none", bwd)
+
+
+@pytest.mark.parametrize("cfg,bwd", [("con2", "gap2"), ("gap2", "con4"),
+                                     ("con4", "con2")])
+def test_grad_parity_mixed_axes(cfg, bwd):
+    """Forward and backward coarsen independently (different axes)."""
+    _assert_grad_parity(cfg, bwd)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+@pytest.mark.parametrize("cfg,bwd", [("con2", "con2"), ("gap2", "gap2")])
+def test_grad_parity_windowed(cfg, bwd, window):
+    _assert_grad_parity(cfg, bwd, window=window)
+
+
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_grad_parity_gqa(hkv):
+    """GQA: dK/dV partials reduce over the query-head group."""
+    _assert_grad_parity("con2", "con2", hkv=hkv)
+
+
+def test_grad_parity_noncausal_cross():
+    """Non-causal Sq != Sk (the cross-attention geometry)."""
+    _assert_grad_parity("con2", "gap2", causal=False, sk=64)
+
+
+def test_scale_threads_through_fwd_and_bwd():
+    """Satellite bugfix: ops.flash_attention takes `scale` and threads it
+    through the kernel — value AND gradient must honor it."""
+    q, k, v = _operands()
+    want = ref.attention(q, k, v, scale=0.5)
+    got = ops.flash_attention(q, k, v, "con2", bwd_cfg="con2",
+                              bq=BQ, bkv=BKV, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    _assert_grad_parity("con2", "con2", scale=0.5)
+    # and a non-default scale really changes the result
+    base = ops.flash_attention(q, k, v, "con2", bwd_cfg="con2",
+                               bq=BQ, bkv=BKV)
+    assert not np.allclose(np.asarray(got), np.asarray(base))
+
+
+def test_mea_grad_is_the_oracle():
+    """The acceptance-bar statement: custom-VJP grads match
+    jax.grad(mea_attention) within 1e-4 (f32)."""
+    q, k, v = _operands()
+    qm, km, vm = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    want = _grads(lambda a, b, c: L.mea_attention(a, b, c, causal=True),
+                  qm, km, vm)
+    got = _grads(lambda a, b, c: ops.flash_attention(
+        a, b, c, CoarseningConfig.parse("con2"),
+        bwd_cfg=CoarseningConfig.parse("con2"), bq=BQ, bkv=BKV), q, k, v)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g),
+                                   np.asarray(w.transpose(0, 2, 1, 3)),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention_bwd tuner family
+# ---------------------------------------------------------------------------
+
+BWD_SPEC = KernelSpec.make("flash_attention_bwd", (8, 16, 4, 2048, 2048, 128),
+                           dtype="bfloat16", bq=128, bkv=128, causal=True)
+FWD_SPEC = KernelSpec.make("flash_attention", (8, 16, 4, 2048, 2048, 128),
+                           dtype="bfloat16", bq=128, bkv=128, causal=True)
+
+
+def test_bwd_candidates_respect_kv_divisibility():
+    """Legality: the dK/dV degree tiles the KV axis (bkv*deg | sk), not the
+    q axis — the two families enumerate different spaces."""
+    cands = enumerate_candidates(BWD_SPEC)
+    assert cands
+    for c in cands:
+        assert 2048 % (128 * c.degree) == 0
+        assert c.replication == 1 and c.vector_width == 1
+    # sk=512 tiles degrees {1,2,4} on the kv axis even though sq=256 only
+    # tiles {1,2} on the q axis — the bwd family keys off sk
+    small = KernelSpec.make("flash_attention_bwd", (1, 4, 2, 256, 512, 64),
+                            bq=128, bkv=128)
+    assert {c.degree for c in enumerate_candidates(small)} == {1, 2, 4}
+
+
+def test_fwd_and_bwd_tune_independently(scratch_default_cache):
+    """The same geometry resolves through TWO cache keys; each family's
+    winner is its own modeled argmin."""
+    for spec in (FWD_SPEC, BWD_SPEC):
+        res = search(spec)
+        costs = {c.label: model_cost(spec, c)
+                 for c in enumerate_candidates(spec)}
+        assert res.best.label == min(costs, key=costs.get)
+    assert FWD_SPEC.key != BWD_SPEC.key
+
+
+def test_coarsened_bwd_beats_dense_baseline():
+    """The attention-benchmark acceptance direction: at every paper-scale
+    length, some coarsened degree beats the mea baseline on fwd+bwd, and
+    the modeled argmin (what AUTO dispatches) matches or beats every fixed
+    degree."""
+    for s in (512, 1024, 2048, 4096):
+        dense = (flash_attention_cost(8, 16, 4, s, s, 128,
+                                      CoarseningConfig(), dense=True).modeled_s
+                 + flash_attention_bwd_cost(8, 16, 4, s, s, 128,
+                                            CoarseningConfig(),
+                                            dense=True).modeled_s)
+        fixed = {}
+        for deg in (1, 2, 4, 8):
+            if s % (128 * deg):
+                continue
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            fixed[deg] = (flash_attention_cost(8, 16, 4, s, s, 128,
+                                               cfg).modeled_s
+                          + flash_attention_bwd_cost(8, 16, 4, s, s, 128,
+                                                     cfg, q_cfg=cfg).modeled_s)
+        assert min(fixed.values()) < dense, (s, fixed, dense)
+        spec_f = KernelSpec.make("flash_attention", (8, 16, 4, s, s, 128),
+                                 dtype="bfloat16", bq=128, bkv=128,
+                                 causal=True)
+        spec_b = KernelSpec.make("flash_attention_bwd",
+                                 (8, 16, 4, s, s, 128), dtype="bfloat16",
+                                 bq=128, bkv=128, causal=True)
+        bf, bb = search(spec_f).best, search(spec_b).best
+        auto = (flash_attention_cost(8, 16, 4, s, s, 128, bf).modeled_s
+                + flash_attention_bwd_cost(8, 16, 4, s, s, 128, bb,
+                                           q_cfg=bf).modeled_s)
+        assert auto <= min(fixed.values()) * (1 + 1e-9), (s, auto, fixed)
+
+
+def test_gapped_bwd_pays_divergence_penalty():
+    """Causal dK/dV: gapped fuses segment-0 kv rows into every program so
+    the causal sweep degenerates to the worst row — consecutive must model
+    cheaper at every degree (the decode kernel's divergence framing)."""
+    for deg in (2, 4, 8):
+        con = flash_attention_bwd_cost(
+            8, 16, 4, 2048, 2048, 128,
+            CoarseningConfig.parse(f"con{deg}")).modeled_s
+        gap = flash_attention_bwd_cost(
+            8, 16, 4, 2048, 2048, 128,
+            CoarseningConfig.parse(f"gap{deg}")).modeled_s
+        assert con < gap, (deg, con, gap)
+
+
+def test_warm_covers_flash_families(tmp_path):
+    from repro.tune import TuningCache, warm_for_model
+    cfg = get_config("qwen3-0.6b")
+    cache = TuningCache(str(tmp_path / "warm.json"))
+    out = warm_for_model(cfg, seq=256, batch=4, cache=cache, verbose=False)
+    assert "flash_attention" in out and "flash_attention_bwd" in out
+
+
+# ---------------------------------------------------------------------------
+# models/layers dispatch wrapper + fallback rules
+# ---------------------------------------------------------------------------
+
+def _model_operands(s=64, sk=None, hkv=2):
+    sk = sk or s
+    q = jax.random.normal(KEY, (2, s, 4, 32)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (2, sk, hkv, 32)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (2, sk, hkv, 32))
+    return q, k, v
+
+
+def test_layer_dispatch_matches_mea(scratch_default_cache):
+    q, k, v = _model_operands()
+    want = L.mea_attention(q, k, v, causal=True)
+    got = L.flash_attention(q, k, v, causal=True, pos_trivial=True,
+                            backend="pallas", bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # it really went through the kernel — but a FORWARD-ONLY dispatch must
+    # resolve (and persist) only the forward family: the backward search
+    # is deferred to the first backward trace
+    keys = list(json.load(open(scratch_default_cache))["entries"])
+    assert any(k_.startswith("flash_attention|") for k_ in keys)
+    assert not any(k_.startswith("flash_attention_bwd|") for k_ in keys)
+    jax.grad(lambda a: jnp.sum(L.flash_attention(
+        a, k, v, causal=True, pos_trivial=True, backend="pallas",
+        bq=32, bkv=32)))(q)
+    keys = list(json.load(open(scratch_default_cache))["entries"])
+    assert any(k_.startswith("flash_attention_bwd|") for k_ in keys)
+
+
+def test_layer_dispatch_fallbacks(scratch_default_cache):
+    """Ragged q_pos, k_len, untileable shapes, and untileable explicit
+    degrees all fall back to mea_attention (bit-exact, no error)."""
+    q, k, v = _model_operands()
+    want = L.mea_attention(q, k, v, causal=True)
+    # causal without the trivial-positions proof -> mea
+    got = L.flash_attention(q, k, v, causal=True, pos_trivial=False,
+                            backend="pallas", bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0,
+                               atol=0)
+    # k_len masking -> mea
+    kl = jnp.full((2,), 48, jnp.int32)
+    got = L.flash_attention(q, k, v, causal=True, pos_trivial=True,
+                            k_len=kl, backend="pallas", bq=32, bkv=32)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(L.mea_attention(q, k, v, causal=True, k_len=kl)),
+        rtol=0, atol=0)
+    # untileable sequence -> mea
+    q2, k2, v2 = _model_operands(s=48)
+    got = L.flash_attention(q2, k2, v2, causal=True, pos_trivial=True,
+                            backend="pallas", bq=32, bkv=32)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(L.mea_attention(q2, k2, v2, causal=True)), rtol=0, atol=0)
+    # explicit degree the geometry can't tile -> mea
+    got = L.flash_attention(q, k, v, causal=True, pos_trivial=True,
+                            backend="pallas", cfg="con4", bwd_cfg="none",
+                            bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0,
+                               atol=0)
+
+
+def test_layer_dispatch_cross_attention(scratch_default_cache):
+    """Non-causal Sq != Sk dispatches the kernel without a positions
+    proof (mask-free)."""
+    q, k, v = _model_operands(s=64, sk=96)
+    want = L.mea_attention(q, k, v, causal=False)
+    got = L.flash_attention(q, k, v, causal=False, backend="pallas",
+                            bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# train-step smoke: attn_backend="pallas" matches the ref backend
+# ---------------------------------------------------------------------------
+
+def test_train_step_loss_and_grad_parity(scratch_default_cache):
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              compute_dtype="float32")
+    cfg_k = dataclasses.replace(cfg, attn_backend="pallas",
+                                attn_bq=32, attn_bkv=32)
+    key = jax.random.PRNGKey(0)
+    params = M.lm_init(key, cfg)
+    b, s = 2, 64
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (b, s), 0, cfg.vocab)}
+
+    def loss(p, c, remat="none"):
+        return M.lm_loss(p, batch, c, remat=remat)[0]
+
+    l_ref, l_pal = loss(params, cfg), loss(params, cfg_k)
+    np.testing.assert_allclose(float(l_pal), float(l_ref), rtol=1e-5)
+    g_ref = jax.grad(loss)(params, cfg)
+    g_pal = jax.grad(loss)(params, cfg_k)
+    for w, g in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-3, atol=1e-4)
+    # remat="dots" saves the checkpoint-named kernel output; grads unchanged
+    g_dots = jax.grad(lambda p: loss(p, cfg_k, remat="dots"))(params)
+    for w, g in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_dots)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_explicit_positions_keep_mea_path(scratch_default_cache):
+    """A batch carrying explicit positions (packing) must produce identical
+    losses under both backends BECAUSE the pallas config falls back."""
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              compute_dtype="float32")
+    cfg_k = dataclasses.replace(cfg, attn_backend="pallas",
+                                attn_bq=32, attn_bkv=32)
+    key = jax.random.PRNGKey(3)
+    params = M.lm_init(key, cfg)
+    b, s = 2, 64
+    pos = jnp.broadcast_to(jnp.arange(7, 7 + s, dtype=jnp.int32)[None],
+                           (b, s))
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (b, s), 0, cfg.vocab),
+             "positions": pos}
+    l_ref = M.lm_loss(params, batch, cfg)[0]
+    l_pal = M.lm_loss(params, batch, cfg_k)[0]
+    np.testing.assert_allclose(float(l_pal), float(l_ref), rtol=0, atol=0)

@@ -204,16 +204,6 @@ def test_tuner_cache_roundtrip(tmp_path):
     assert entry["cfg"] == cfg.label
 
 
-@pytest.fixture
-def scratch_default_cache(tmp_path, monkeypatch):
-    monkeypatch.setenv(tune_cache.ENV_VAR, str(tmp_path / "auto.json"))
-    tune_cache._DEFAULT.clear()
-    ops._auto_cfg.cache_clear()
-    yield str(tmp_path / "auto.json")
-    tune_cache._DEFAULT.clear()
-    ops._auto_cfg.cache_clear()
-
-
 def test_ops_auto_dispatch(scratch_default_cache):
     """cfg='auto' resolves through the tuner, persists the winner under the
     moe_ffn family key, and the second call never re-searches."""

@@ -162,16 +162,6 @@ def test_autotune_second_call_hits_cache(tmp_path):
 # cfg="auto" through ops
 # ---------------------------------------------------------------------------
 
-@pytest.fixture
-def scratch_default_cache(tmp_path, monkeypatch):
-    monkeypatch.setenv(tune_cache.ENV_VAR, str(tmp_path / "auto.json"))
-    tune_cache._DEFAULT.clear()
-    ops._auto_cfg.cache_clear()
-    yield str(tmp_path / "auto.json")
-    tune_cache._DEFAULT.clear()
-    ops._auto_cfg.cache_clear()
-
-
 def test_ops_auto_matches_explicitly_tuned(scratch_default_cache):
     n, block = 1 << 14, 512
     xs = tuple(jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(0), i),
