@@ -1,0 +1,142 @@
+"""Quantization table: dense bf16 vs dequant-fused int8/int4 kernels at
+fixed coarsening degrees and AUTO, plus the int8-KV decode row.
+
+For the model-scale grouped-expert MoE point and the FFN matmul point emit:
+
+  bf16,conN      the dense kernel at fixed consecutive degrees
+  int8/int4,conN the dequant-fused kernel: packed weight panes (2-4x fewer
+                 bytes per pane), per-program VMEM dequant
+  *,AUTO[label]  the repro.tune pick over the full (kind, degree) space —
+                 quantized specs carry wbits/group and can (and do) pick a
+                 DIFFERENT degree than the dense spec of the same geometry,
+                 because the packed panes move the memory/compute crossover
+
+`derived` is the modeled v5e time (core/analysis with the quant byte +
+dequant terms); `us_per_call` is CPU interpret wall time at a reduced
+geometry (transparency only; -1 when not measured).  The acceptance
+direction: every quantized AUTO row beats its dense AUTO counterpart in
+modeled time, and at least one geometry shows distinct winning degrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CoarseningConfig
+from repro.core.analysis import (decode_attention_cost, matmul_cost,
+                                 moe_ffn_cost)
+from repro.kernels import ops
+from repro.models.layers import moe_default_capacity
+from repro.quant import quantize, quantize_kv
+from repro.tune import KernelSpec, search
+from benchmarks.common import wall_us, emit
+
+# modeled (paper-scale) geometries
+MOE = (64, 128, 2048, 1024)            # e, cap, d, f  (olmoe-like)
+MM = (4096, 2048, 4096)                # m, n, k       (ffn matmul tile)
+DEC = (8, 16, 4, 4096, 128)            # b, h, hkv, s, d
+# measured (CPU interpret) geometry
+ME, MCAP, MD, MF = 16, 8, 64, 128
+DEGREES = (1, 2, 4, 8)
+MODES = (None, 8, 4)                   # wbits: dense, int8, int4
+
+
+def _mode_name(wbits):
+    return {None: "bf16", 8: "int8", 4: "int4"}[wbits]
+
+
+def _moe_measured(cfg, wbits):
+    key = jax.random.PRNGKey(0)
+    xe = jax.random.normal(key, (ME, MCAP, MD)) * 0.5
+    w1 = jax.random.normal(jax.random.fold_in(key, 1), (ME, MD, MF)) / 8
+    w3 = jax.random.normal(jax.random.fold_in(key, 2), (ME, MD, MF)) / 8
+    w2 = jax.random.normal(jax.random.fold_in(key, 3), (ME, MF, MD)) / 11
+    wts = jax.random.uniform(jax.random.fold_in(key, 4), (ME, MCAP))
+    if ME % cfg.degree:
+        return -1.0
+    if wbits is None:
+        return wall_us(lambda: ops.moe_ffn(xe, w1, w3, w2, wts, cfg))
+    mode = "int8" if wbits == 8 else "int4"
+    q1, q3, q2 = (quantize(w, mode) for w in (w1, w3, w2))
+    return wall_us(lambda: ops.quant_moe_ffn(xe, q1, q3, q2, wts, cfg))
+
+
+def _spec(family, shape, wbits, **params):
+    if wbits:
+        params.update(wbits=wbits, group=32 if wbits == 4 else 0)
+    return KernelSpec.make(family, shape, dtype="bfloat16", **params)
+
+
+def main() -> None:
+    # ---- grouped-expert MoE FFN ----
+    e, cap, d, f = MOE
+    base = moe_ffn_cost(e, cap, d, f, CoarseningConfig()).modeled_s
+    for wbits in MODES:
+        kw = {"wbits": wbits, "group": 32} if wbits else {}
+        name = f"quant,moe,E{e}xC{cap},{_mode_name(wbits)}"
+        for deg in DEGREES:
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            c = moe_ffn_cost(e, cap, d, f, cfg, **kw)
+            emit(f"{name},con{deg}",
+                 _moe_measured(cfg, wbits), c.modeled_s * 1e6,
+                 speedup=round(base / c.modeled_s, 2))
+        best = search(_spec("moe_ffn", MOE, wbits)).best
+        c = moe_ffn_cost(e, cap, d, f, best, **kw)
+        emit(f"{name},AUTO[{best.label}]",
+             _moe_measured(best, wbits), c.modeled_s * 1e6,
+             speedup=round(base / c.modeled_s, 2))
+
+    # ---- blocked FFN matmul (quantized B operand) ----
+    m, n, k = MM
+    base = matmul_cost(m, n, k, CoarseningConfig(), bk=256).modeled_s
+    for wbits in MODES:
+        kw = {"wbits": wbits, "group": 32} if wbits else {}
+        name = f"quant,matmul,{m}x{n}x{k},{_mode_name(wbits)}"
+        for deg in (1, 4, 8):
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            c = matmul_cost(m, n, k, cfg, bk=256, **kw)
+            emit(f"{name},con{deg}", -1.0, c.modeled_s * 1e6,
+                 speedup=round(base / c.modeled_s, 2))
+        best = search(_spec("matmul", MM, wbits, bm=128, bn=128, bk=256)).best
+        c = matmul_cost(m, n, k, best, bk=256, **kw)
+        emit(f"{name},AUTO[{best.label}]", -1.0, c.modeled_s * 1e6,
+             speedup=round(base / c.modeled_s, 2))
+
+    # ---- int8-KV split-KV decode attention ----
+    b, h, hkv, s, dd = DEC
+    base = decode_attention_cost(b, h, hkv, s, dd, CoarseningConfig()).modeled_s
+    for kv_bits in (None, 8):
+        kw = {} if kv_bits is None else {"kv_bits": kv_bits}
+        nm = f"quant,decode,S{s},{'bf16' if kv_bits is None else 'int8kv'}"
+        for deg in (1, 4, 8):
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            c = decode_attention_cost(b, h, hkv, s, dd, cfg, **kw)
+            emit(f"{nm},con{deg}", _decode_measured(cfg, kv_bits),
+                 c.modeled_s * 1e6, speedup=round(base / c.modeled_s, 2))
+        spec = KernelSpec.make("decode_attention", DEC,
+                               dtype="int8" if kv_bits else "bfloat16",
+                               bkv=128, window=0, **kw)
+        best = search(spec).best
+        c = decode_attention_cost(b, h, hkv, s, dd, best, **kw)
+        emit(f"{nm},AUTO[{best.label}]", _decode_measured(best, kv_bits),
+             c.modeled_s * 1e6, speedup=round(base / c.modeled_s, 2))
+
+
+def _decode_measured(cfg, kv_bits, *, b=2, h=4, hkv=2, s=256, d=32, bkv=64):
+    key = jax.random.PRNGKey(0)
+    if s % (bkv * cfg.degree):
+        return -1.0
+    q = jax.random.normal(key, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    if kv_bits:
+        kq, ks = quantize_kv(kc)
+        vq, vs = quantize_kv(vc)
+        return wall_us(lambda: ops.decode_attention(
+            q, kq, vq, pos, cfg, bkv=bkv, k_scale=ks, v_scale=vs))
+    return wall_us(lambda: ops.decode_attention(q, kc, vc, pos, cfg, bkv=bkv))
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,9 @@ Tables (one per paper figure):
   moe    — unfused einsum baseline vs the fused grouped-expert MoE FFN
   attention — mea baseline vs the custom-VJP coarsened flash kernel
               (fwd and fwd·bwd rows; fwd/bwd degrees tuned independently)
+  quant  — dense bf16 vs dequant-fused int8/int4 weight kernels and the
+           int8-KV decode path, fixed degrees vs AUTO (quantized specs can
+           pick different winning degrees than dense ones)
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -30,7 +33,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline, tuned, decode, moe, attention)
+                        roofline, tuned, decode, moe, attention, quant)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -45,6 +48,7 @@ TABLES = {
     "decode": decode.main,
     "moe": moe.main,
     "attention": attention.main,
+    "quant": quant.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

@@ -1,6 +1,12 @@
 """Serve a small model with batched requests (continuous batching).
 
     PYTHONPATH=src python examples/serve_batched.py --requests 8 --slots 4
+
+Weight-only quantization + int8 KV cache (the driver prints the weight and
+cache-memory saving next to the prefill/decode tok/s):
+
+    PYTHONPATH=src python examples/serve_batched.py --requests 8 --slots 4 \
+        --quant int8 --kv-quant int8 --decode-backend pallas
 """
 import sys
 

@@ -38,6 +38,18 @@ NUM_CORES = 1               # v5e has one TensorCore per chip
 DMA_MLP = 16                # outstanding random accesses the DMA engines
                             # keep in flight (memory-level parallelism)
 
+# weight-only quantization (repro.quant): VPU ops per dequantized element.
+# int8 = convert + scale-multiply; int4 = nibble mask/shift + offset + scale.
+# This is the per-pane overhead coarsening amortizes — packed panes shrink
+# the DMA term by 8/wbits while dequant grows the compute term, so the
+# memory/compute crossover (and hence the winning degree) MOVES.
+DEQUANT_OPS = {8: 2.0, 4: 4.0}
+
+
+def _wbytes(dtype_bytes: float, wbits: int | None) -> float:
+    """Per-element weight bytes: packed width when quantized, else dtype."""
+    return dtype_bytes if not wbits else wbits / 8.0
+
 
 @dataclasses.dataclass
 class KernelCost:
@@ -200,9 +212,15 @@ def gather_cost(plan: StreamPlan, *, n_loads: int, arith_per_elem: float,
 
 def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
                 bm: int = 128, bn: int = 128, bk: int = 512,
-                dtype_bytes: int = 2,
+                dtype_bytes: int = 2, wbits: int | None = None,
+                group: int = 32,
                 flops_rate: float = MXU_FLOPS_BF16) -> KernelCost:
-    """Blocked matmul with row-block coarsening (dense linear algebra apps)."""
+    """Blocked matmul with row-block coarsening (dense linear algebra apps).
+
+    ``wbits`` models the dequant-fused quantized-B kernel: the B pane moves
+    packed (wbits/8 bytes per element, plus the small scale pane) and each
+    program pays a VPU dequant over the pane it holds in VMEM.
+    """
     c = cfg.degree
     bn = bn * cfg.vector_width          # SIMD analog: wider lane tiles
     fused_m = bm * c
@@ -210,7 +228,9 @@ def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
     # A tile: fused_m x bk ; consecutive = 1 DMA, gapped = C strided DMAs
     a_dmas = 1 if cfg.kind != KIND_GAPPED else c
     a_bytes = fused_m * bk * dtype_bytes / a_dmas
-    b_bytes = bk * bn * dtype_bytes
+    b_bytes = bk * bn * _wbytes(dtype_bytes, wbits)
+    if wbits:                            # scale rows ride with the pane
+        b_bytes += (bk // group if wbits == 4 else 1) * bn * 4.0
     dma_s = _dma_time(a_bytes, a_dmas) + _dma_time(b_bytes, 1)
     out_bytes = fused_m * bn * 4
     store_s = _dma_time(out_bytes / a_dmas, a_dmas) * (bk / k)  # amortised over k
@@ -218,6 +238,8 @@ def matmul_cost(m: int, n: int, k: int, cfg: CoarseningConfig, *,
     # MXU efficiency: matmul M-dim under 128 wastes systolic rows
     eff = min(1.0, fused_m / 128) * min(1.0, bn / 128)
     compute_s = flops / (flops_rate * eff)
+    if wbits:                            # per-pane VPU dequant
+        compute_s += bk * bn * DEQUANT_OPS[wbits] / VPU_FLOPS_F32
     repl = cfg.replication
     if repl > 1:
         dma_s = dma_s * repl  # shared HBM
@@ -380,6 +402,7 @@ def flash_attention_bwd_cost(b: int, h: int, hkv: int, sq: int, sk: int,
 def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
                           cfg: CoarseningConfig, *, bkv: int = 128,
                           kv_len: int | None = None, dtype_bytes: int = 2,
+                          kv_bits: int | None = None,
                           dense: bool = False) -> KernelCost:
     """Split-KV decode attention (one query token vs a (S, Hkv, D) cache).
 
@@ -405,9 +428,16 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     grid = b * hkv * n_splits
 
     descs = c if (not dense and cfg.kind == KIND_GAPPED) else 1
-    bytes_per_desc = c * bkv * d * dtype_bytes / descs
+    # kv_bits=8 (int8 KV cache): the cache panes — decode's dominant
+    # traffic — move at 1 byte/element plus a 4-byte scale per (row, head);
+    # the fused dequant is extra VPU work per pane.
+    kvb = _wbytes(dtype_bytes, None if dense else kv_bits)
+    bytes_per_desc = c * bkv * (d * kvb + (4.0 if kv_bits and not dense
+                                           else 0.0)) / descs
     dma_s = 2 * _dma_time(bytes_per_desc, descs)          # K + V panes
     flops = 4.0 * g * c * bkv * d + 6.0 * g * c * bkv     # qk + pv + softmax
+    if kv_bits and not dense:
+        flops += 2 * c * bkv * d * DEQUANT_OPS[kv_bits]   # K and V panes
     compute_s = flops / VPU_FLOPS_F32
 
     step = max(dma_s, compute_s)
@@ -433,7 +463,8 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
 
 
 def moe_ffn_cost(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
-                 dtype_bytes: int = 2, dense: bool = False) -> KernelCost:
+                 dtype_bytes: int = 2, wbits: int | None = None,
+                 group: int = 32, dense: bool = False) -> KernelCost:
     """Grouped-expert MoE FFN over the padded (E, C, d) dispatch buffer.
 
     The work-item axis is the EXPERT axis: the grid walks E/C programs, each
@@ -447,12 +478,22 @@ def moe_ffn_cost(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
     descriptors) plus f32 HBM round-trips for the (E, cap, f) gate and up
     intermediates between the einsums — traffic the fused kernel never
     emits (the pipes-paper producer/consumer saving).
+
+    ``wbits`` models the dequant-fused quantized-weight kernel
+    (kernels/moe_ffn.make_qkernel): the three weight panes move packed —
+    8/wbits fewer bytes for the SAME wide/strided pane distribution — and
+    each program pays a VPU dequant over its experts' weights.  Because the
+    dense kernel here is weight-bytes-bound, quantization moves the
+    memory/compute crossover and with it the winning coarsening degree.
     """
     c = 1 if dense else cfg.degree
     grid = max(1, e // c)
     descs = c if (not dense and cfg.kind == KIND_GAPPED) else 1
 
-    w_bytes = c * d * f * dtype_bytes / descs
+    wb = _wbytes(dtype_bytes, None if dense else wbits)
+    w_bytes = c * d * f * wb / descs
+    if wbits and not dense:                  # scale rows ride with the pane
+        w_bytes += c * (d // group if wbits == 4 else 1) * f * 4.0 / descs
     x_bytes = c * cap * d * dtype_bytes / descs
     o_bytes = c * cap * d * 4 / descs
     dma_s = (3 * _dma_time(w_bytes, descs) + _dma_time(x_bytes, descs)
@@ -462,6 +503,8 @@ def moe_ffn_cost(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
     rate = MXU_FLOPS_BF16 if dtype_bytes == 2 else MXU_FLOPS_F32
     eff = min(1.0, cap / 128)                # cap rows under-fill the MXU
     compute_s = flops / (rate * eff)
+    if wbits and not dense:                  # per-pane VPU dequant (3 panes)
+        compute_s += 3 * c * d * f * DEQUANT_OPS[wbits] / VPU_FLOPS_F32
 
     step = max(dma_s, compute_s)
     total = (dma_s + compute_s) + step * max(0, grid - 1)

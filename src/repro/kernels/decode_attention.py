@@ -51,11 +51,19 @@ def _combine(m, l, acc):
 def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
                 cfg: CoarseningConfig, *, bkv: int = 128,
                 window: int | None = None, scale: float | None = None,
+                kv_bits: int | None = None,
                 interpret: bool = True) -> Callable:
     """Build the split-KV decode kernel.
 
     Returned callable: run(q (B,1,H,D), k_cache, v_cache (B,S,Hkv,D),
     pos (B,) int32) -> (B,1,H,D).
+
+    ``kv_bits=8`` enables the int8 KV-cache mode: the caches arrive int8
+    with per-(token, kv-head) f32 scales (B,S,Hkv) and the callable becomes
+    run(q, k_cache, v_cache, k_scale, v_scale, pos).  The dequant
+    (scale-multiply) is fused into the same VMEM pass the online softmax
+    already makes, so the cache DMA — the decode hot path's dominant
+    traffic — halves against bf16 while the kernel math stays f32.
     """
     c = cfg.degree
     if s % (c * bkv):
@@ -67,8 +75,15 @@ def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
     n_splits = s // (c * bkv)
     sg = s // c                          # gapped segment length (rows)
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kv_bits not in (None, 8):
+        raise ValueError(f"kv_bits must be None or 8, got {kv_bits}")
+    quant = kv_bits == 8
 
-    def body(pos_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref):
+    def body(pos_ref, q_ref, k_ref, v_ref, *refs):
+        if quant:
+            ks_ref, vs_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            m_ref, l_ref, acc_ref = refs
         si = pl.program_id(2)
         pos = pos_ref[0, 0]
 
@@ -88,6 +103,11 @@ def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
             q = q_ref[...].reshape(g, d).astype(jnp.float32)
             kk = k_ref[...].reshape(c * bkv, d)
             vv = v_ref[...].reshape(c * bkv, d)
+            if quant:
+                # fused dequant: one scale-multiply over the pane already in
+                # VMEM (per-token x kv-head scales)
+                kk = kk.astype(jnp.float32) * ks_ref[...].reshape(c * bkv, 1)
+                vv = vv.astype(jnp.float32) * vs_ref[...].reshape(c * bkv, 1)
             m = jnp.full((g,), NEG, jnp.float32)
             l = jnp.zeros((g,), jnp.float32)
             acc = jnp.zeros((g, d), jnp.float32)
@@ -123,24 +143,35 @@ def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
 
     # K/V cache views: consecutive fetches one contiguous (c*bkv, d) pane;
     # gapped views the row axis as (C, S/C) and fetches C strided panes.
+    # The scale panes follow the same distribution, minus the D axis.
     if gapped:
         kv_spec = pl.BlockSpec((1, c, bkv, 1, d),
                                lambda bb, hh, si: (bb, 0, si, hh, 0))
         kv_view = lambda x: x.reshape(b, c, sg, hkv, d)
+        sc_spec = pl.BlockSpec((1, c, bkv, 1),
+                               lambda bb, hh, si: (bb, 0, si, hh))
+        sc_view = lambda x: x.reshape(b, c, sg, hkv)
     else:
         kv_spec = pl.BlockSpec((1, c * bkv, 1, d),
                                lambda bb, hh, si: (bb, si, hh, 0))
         kv_view = lambda x: x
+        sc_spec = pl.BlockSpec((1, c * bkv, 1),
+                               lambda bb, hh, si: (bb, si, hh))
+        sc_view = lambda x: x
+
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, hh, si: (bb, 0)),          # pos
+        pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    if quant:
+        in_specs += [sc_spec, sc_spec]
 
     call = pl.pallas_call(
         body,
         grid=(b, hkv, n_splits),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda bb, hh, si: (bb, 0)),          # pos
-            pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
-            kv_spec,
-            kv_spec,
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
             pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
@@ -155,11 +186,20 @@ def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
         interpret=interpret,
     )
 
-    def run(q, k_cache, v_cache, pos):
-        qv = q.reshape(b, hkv, g, d)
-        pos2 = pos.reshape(b, 1).astype(jnp.int32)
-        m, l, acc = call(pos2, qv, kv_view(k_cache), kv_view(v_cache))
-        out = _combine(m, l, acc)                     # (B, Hkv, G, D)
-        return out.reshape(b, 1, h, d).astype(q.dtype)
+    if quant:
+        def run(q, k_cache, v_cache, k_scale, v_scale, pos):
+            qv = q.reshape(b, hkv, g, d)
+            pos2 = pos.reshape(b, 1).astype(jnp.int32)
+            m, l, acc = call(pos2, qv, kv_view(k_cache), kv_view(v_cache),
+                             sc_view(k_scale), sc_view(v_scale))
+            out = _combine(m, l, acc)                 # (B, Hkv, G, D)
+            return out.reshape(b, 1, h, d).astype(q.dtype)
+    else:
+        def run(q, k_cache, v_cache, pos):
+            qv = q.reshape(b, hkv, g, d)
+            pos2 = pos.reshape(b, 1).astype(jnp.int32)
+            m, l, acc = call(pos2, qv, kv_view(k_cache), kv_view(v_cache))
+            out = _combine(m, l, acc)                 # (B, Hkv, G, D)
+            return out.reshape(b, 1, h, d).astype(q.dtype)
 
     return run

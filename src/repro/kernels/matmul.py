@@ -21,6 +21,26 @@ from jax.experimental import pallas as pl
 from repro.core.coarsening import CoarseningConfig, KIND_GAPPED
 
 
+def _a_o_layout(m: int, n: int, k: int, c: int, bm: int, bn: int, bk: int,
+                gapped: bool):
+    """The A-operand / output BlockSpecs + views shared by the dense and the
+    dequant-fused kernels (coarsening lives entirely on the A row axis)."""
+    if gapped:
+        # A viewed (C, M/C, K): program (i,j,kk) fuses row-blocks i, i+gm, ...
+        a_spec = pl.BlockSpec((c, bm, bk), lambda i, j, kk: (0, i, kk))
+        o_spec = pl.BlockSpec((c, bm, bn), lambda i, j, kk: (0, i, j))
+        a_view = lambda a: a.reshape(c, m // c, k)
+        o_shape = (c, m // c, n)
+        o_unview = lambda o: o.reshape(m, n)
+    else:
+        a_spec = pl.BlockSpec((c * bm, bk), lambda i, j, kk: (i, kk))
+        o_spec = pl.BlockSpec((c * bm, bn), lambda i, j, kk: (i, j))
+        a_view = lambda a: a
+        o_shape = (m, n)
+        o_unview = lambda o: o
+    return a_spec, o_spec, a_view, o_shape, o_unview
+
+
 def make_kernel(m: int, n: int, k: int, cfg: CoarseningConfig, *,
                 bm: int = 128, bn: int = 128, bk: int = 256,
                 interpret: bool = True) -> Callable:
@@ -43,19 +63,8 @@ def make_kernel(m: int, n: int, k: int, cfg: CoarseningConfig, *,
         acc = jnp.dot(a, b_ref[...], preferred_element_type=jnp.float32)
         o_ref[...] += acc.reshape(o_ref.shape)
 
-    if gapped:
-        # A viewed (C, M/C, K): program (i,j,kk) fuses row-blocks i, i+gm, ...
-        a_spec = pl.BlockSpec((c, bm, bk), lambda i, j, kk: (0, i, kk))
-        o_spec = pl.BlockSpec((c, bm, bn), lambda i, j, kk: (0, i, j))
-        a_view = lambda a: a.reshape(c, m // c, k)
-        o_shape = (c, m // c, n)
-        o_unview = lambda o: o.reshape(m, n)
-    else:
-        a_spec = pl.BlockSpec((c * bm, bk), lambda i, j, kk: (i, kk))
-        o_spec = pl.BlockSpec((c * bm, bn), lambda i, j, kk: (i, j))
-        a_view = lambda a: a
-        o_shape = (m, n)
-        o_unview = lambda o: o
+    a_spec, o_spec, a_view, o_shape, o_unview = _a_o_layout(
+        m, n, k, c, bm, bn, bk, gapped)
 
     call = pl.pallas_call(
         body,
@@ -71,5 +80,79 @@ def make_kernel(m: int, n: int, k: int, cfg: CoarseningConfig, *,
 
     def run(a, b):
         return o_unview(call(a_view(a), b))
+
+    return run
+
+
+def make_qkernel(m: int, n: int, k: int, cfg: CoarseningConfig, *,
+                 bits: int = 8, group: int = 32,
+                 bm: int = 128, bn: int = 128, bk: int = 256,
+                 interpret: bool = True) -> Callable:
+    """Dequant-fused quantized-B matmul: B arrives PACKED (int8 payload, or
+    int4 nibbles two-per-byte along K) plus scales, so the B-pane DMA moves
+    2-4x fewer bytes; the pane is dequantized in VMEM once per program and
+    the dot runs exactly like the dense kernel.  Coarsening is unchanged
+    (A row-blocks), which is the point: the tuner can trade the cheaper B
+    traffic against the extra per-pane dequant compute.
+
+    Returned callable: run(a (m,k), bq, bscale) -> (m,n) f32 where
+      bits=8: bq (k,n) int8, bscale (1,n);  bits=4: bq (k/2,n) uint8
+      offset-binary nibbles, bscale (k/group, n).
+    """
+    c = cfg.degree
+    bn = bn * cfg.vector_width
+    if m % (c * bm) or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not tileable by "
+                         f"C*bm={c*bm}, bn={bn}, bk={bk}")
+    if bits not in (8, 4):
+        raise ValueError(f"bits must be 8 or 4, got {bits}")
+    if bits == 4 and (bk % 2 or group % 2 or bk % group):
+        raise ValueError(f"int4 needs even bk tiled by group, got "
+                         f"bk={bk}, group={group}")
+    gm, gn, gk = m // (c * bm), n // bn, k // bk
+    gapped = cfg.kind == KIND_GAPPED
+
+    def body(a_ref, bq_ref, bs_ref, o_ref):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        a = a_ref[...].reshape(c * bm, bk).astype(jnp.float32)
+        if bits == 8:
+            w = bq_ref[...].astype(jnp.float32) * bs_ref[...]   # (bk,bn)*(1,bn)
+        else:
+            from repro.quant.qtypes import unpack_int4
+            vals = unpack_int4(bq_ref[...], axis=0)             # (bk, bn)
+            w = vals * jnp.repeat(bs_ref[...], group, axis=0)
+        acc = jnp.dot(a, w, preferred_element_type=jnp.float32)
+        o_ref[...] += acc.reshape(o_ref.shape)
+
+    a_spec, o_spec, a_view, o_shape, o_unview = _a_o_layout(
+        m, n, k, c, bm, bn, bk, gapped)
+    if bits == 8:
+        bq_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        bs_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    else:
+        bq_spec = pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j))
+        bs_spec = pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j))
+
+    wbytes = k * n * bits // 8
+    call = pl.pallas_call(
+        body,
+        grid=(gm, gn, gk),
+        in_specs=[a_spec, bq_spec, bs_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        cost_estimate=pl.CostEstimate(
+            flops=2 * m * n * k + 2 * k * n * gm,   # dot + per-pane dequant
+            bytes_accessed=4 * (m * k + m * n) + wbytes,
+            transcendentals=0),
+        interpret=interpret,
+    )
+
+    def run(a, bq, bs):
+        return o_unview(call(a_view(a), bq, bs))
 
     return run

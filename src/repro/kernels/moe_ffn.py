@@ -105,3 +105,107 @@ def make_kernel(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
                            view(wts)))
 
     return run
+
+
+def make_qkernel(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
+                 bits: int = 8, group: int = 32,
+                 interpret: bool = True) -> Callable:
+    """Dequant-fused grouped-expert FFN: the w1/w3/w2 panes arrive PACKED
+    (int8, or int4 nibbles along the contraction axis) plus scales.  Each
+    program DMAs the packed panes of its ``degree`` experts (consecutive =
+    one wide packed pane per operand — 2-4x fewer bytes than the dense
+    kernel's — gapped = degree strided packed panes), dequantizes them in
+    VMEM ONCE, and runs the same fused silu-gate/up/down chain.  The
+    per-pane dequant is exactly the per-work-item overhead coarsening
+    amortizes in the paper.
+
+    Returned callable: run(xe (E,C,d), w1q, w1s, w3q, w3s, w2q, w2s,
+    wts (E,C)) -> (E,C,d) f32, where per expert
+      bits=8: w1q/w3q (E,d,F) int8 + scales (E,1,F); w2q (E,F,d) + (E,1,d)
+      bits=4: w1q/w3q (E,d/2,F) uint8 + scales (E,d/group,F);
+              w2q (E,F/2,d) uint8 + scales (E,F/group,d)
+    """
+    c = cfg.degree
+    if e % c:
+        raise ValueError(f"experts {e} not tileable by degree {c}")
+    if bits not in (8, 4):
+        raise ValueError(f"bits must be 8 or 4, got {bits}")
+    if bits == 4 and (d % group or f % group or group % 2):
+        raise ValueError(f"int4 needs even group tiling d={d} and f={f}, "
+                         f"got group={group}")
+    grid = e // c
+    gapped = cfg.kind == KIND_GAPPED
+
+    def _deq(qv, sv):
+        """(c, Kp, N) packed + (c, S, N) scales -> (c, K, N) f32."""
+        if bits == 8:
+            return qv.astype(jnp.float32) * sv
+        from repro.quant.qtypes import unpack_int4
+        return unpack_int4(qv, axis=1) * jnp.repeat(sv, group, axis=1)
+
+    kd = d // 2 if bits == 4 else d                  # packed contraction dims
+    kf = f // 2 if bits == 4 else f
+    sd = d // group if bits == 4 else 1              # scale rows
+    sf = f // group if bits == 4 else 1
+
+    def body(x_ref, w1q_ref, w1s_ref, w3q_ref, w3s_ref, w2q_ref, w2s_ref,
+             wt_ref, o_ref):
+        x = x_ref[...].reshape(c, cap, d).astype(jnp.float32)
+        w1 = _deq(w1q_ref[...].reshape(c, kd, f),
+                  w1s_ref[...].reshape(c, sd, f))
+        w3 = _deq(w3q_ref[...].reshape(c, kd, f),
+                  w3s_ref[...].reshape(c, sd, f))
+        w2 = _deq(w2q_ref[...].reshape(c, kf, d),
+                  w2s_ref[...].reshape(c, sf, d))
+        wt = wt_ref[...].reshape(c, cap)
+        out = jnp.zeros((c, cap, d), jnp.float32)
+        for j in range(c):              # unrolled: the fused experts
+            xj = x[j]
+            h = jax.nn.silu(jnp.dot(xj, w1[j],
+                                    preferred_element_type=jnp.float32))
+            h = h * jnp.dot(xj, w3[j], preferred_element_type=jnp.float32)
+            yj = jnp.dot(h, w2[j], preferred_element_type=jnp.float32)
+            yj = yj * wt[j][:, None].astype(jnp.float32)
+            out = out.at[j].set(yj)
+        o_ref[...] = out.reshape(o_ref.shape)
+
+    # Expert-axis views mirror the dense kernel's: consecutive fetches one
+    # contiguous pane of C experts per operand, gapped a (C, E/C) view.
+    def espec(*dims):
+        if gapped:
+            return pl.BlockSpec((c, 1) + dims,
+                                lambda i: (0, i) + (0,) * len(dims))
+        return pl.BlockSpec((c,) + dims, lambda i: (i,) + (0,) * len(dims))
+
+    if gapped:
+        view = lambda t: t.reshape((c, grid) + t.shape[1:])
+        o_shape = (c, grid, cap, d)
+        unview = lambda o: o.reshape(e, cap, d)
+    else:
+        view = lambda t: t
+        o_shape = (e, cap, d)
+        unview = lambda o: o
+
+    wbytes = 3 * e * d * f * bits // 8
+    call = pl.pallas_call(
+        body,
+        grid=(grid,),
+        in_specs=[espec(cap, d),
+                  espec(kd, f), espec(sd, f),
+                  espec(kd, f), espec(sd, f),
+                  espec(kf, d), espec(sf, d),
+                  espec(cap)],
+        out_specs=espec(cap, d),
+        out_shape=jax.ShapeDtypeStruct(o_shape, jnp.float32),
+        cost_estimate=pl.CostEstimate(
+            flops=6 * e * cap * d * f + 2 * 3 * e * d * f,  # chain + dequant
+            bytes_accessed=wbytes + 2 * 2 * e * cap * d,
+            transcendentals=e * cap * f),
+        interpret=interpret,
+    )
+
+    def run(xe, w1q, w1s, w3q, w3s, w2q, w2s, wts):
+        args = (xe, w1q, w1s, w3q, w3s, w2q, w2s, wts)
+        return unview(call(*(view(t) for t in args)))
+
+    return run

@@ -35,6 +35,14 @@ from repro.kernels import (
 BASE = CoarseningConfig()
 
 
+def _interpret() -> bool:
+    """Pallas lowering mode for the jit'd ops: interpret on CPU hosts, the
+    real Mosaic lowering on accelerator backends — which is what lets
+    tune.wall_measurer time COMPILED kernels (measured provenance) on a TPU
+    host while keeping interpret-mode timing as the CPU fallback."""
+    return jax.default_backend() == "cpu"
+
+
 @functools.lru_cache(maxsize=1024)
 def _auto_cfg(cache_path, family, shape, dtype, backend, params):
     from repro.tune import KernelSpec, autotune, default_cache
@@ -47,7 +55,12 @@ def resolve_cfg(cfg, family: str, shape, *, dtype="float32",
                 backend: str = "pallas", **params) -> CoarseningConfig:
     """Normalise an op's cfg argument: CoarseningConfig passes through,
     "auto" goes through the tuner (cache-backed), any other string is a
-    coarsening spec label."""
+    coarsening spec label.
+
+    Callers must pass the REAL array dtype (and, for quantized ops, the
+    wbits/kv_bits params): the tuner cache is keyed on it, and bf16 vs f32
+    vs quantized instances of one geometry cost — and can win — differently.
+    The "float32" default only serves dtype-less specs."""
     if isinstance(cfg, CoarseningConfig):
         return cfg
     if cfg == "auto":
@@ -64,14 +77,16 @@ def resolve_cfg(cfg, family: str, shape, *, dtype="float32",
 @functools.lru_cache(maxsize=256)
 def _ew_fn(n, cfg, n_loads, ai, variant, block):
     return jax.jit(_ew.make_kernel(n, cfg, n_loads=n_loads, ai=ai,
-                                   variant=variant, block=block))
+                                   variant=variant, block=block,
+                                   interpret=_interpret()))
 
 
 def ew_stream(inputs, cfg: CoarseningConfig | str = BASE, *, ai: int = 6,
               variant: str = "base", block: int = 1024):
     n = inputs[0].shape[0]
-    cfg = resolve_cfg(cfg, "ew_stream", (n,), n_loads=len(inputs), ai=ai,
-                      variant=variant, block=block)
+    cfg = resolve_cfg(cfg, "ew_stream", (n,), dtype=inputs[0].dtype.name,
+                      n_loads=len(inputs), ai=ai, variant=variant,
+                      block=block)
     fn = _ew_fn(n, cfg, len(inputs), ai, variant, block)
     return fn(*inputs)
 
@@ -79,13 +94,14 @@ def ew_stream(inputs, cfg: CoarseningConfig | str = BASE, *, ai: int = 6,
 @functools.lru_cache(maxsize=256)
 def _gather_fn(n, table, cfg, n_loads, ai, block):
     return jax.jit(_gather.make_kernel(n, table, cfg, n_loads=n_loads, ai=ai,
-                                       block=block))
+                                       block=block, interpret=_interpret()))
 
 
 def gather_stream(idx, tables, cfg: CoarseningConfig | str = BASE, *,
                   ai: int = 6, block: int = 1024):
     cfg = resolve_cfg(cfg, "gather_stream",
                       (idx.shape[0], tables[0].shape[0]),
+                      dtype=tables[0].dtype.name,
                       n_loads=len(tables), ai=ai, block=block)
     fn = _gather_fn(idx.shape[0], tables[0].shape[0], cfg, len(tables), ai, block)
     return fn(idx, *tables)
@@ -95,7 +111,8 @@ def gather_stream(idx, tables, cfg: CoarseningConfig | str = BASE, *,
 def _matmul_fn(m, n, k, cfg, bm, bn, bk, backend):
     if backend == "ref":
         return jax.jit(ref.matmul)
-    return jax.jit(_matmul.make_kernel(m, n, k, cfg, bm=bm, bn=bn, bk=bk))
+    return jax.jit(_matmul.make_kernel(m, n, k, cfg, bm=bm, bn=bn, bk=bk,
+                                       interpret=_interpret()))
 
 
 def matmul(a, b, cfg: CoarseningConfig | str = BASE, *, bm: int = 128,
@@ -108,22 +125,56 @@ def matmul(a, b, cfg: CoarseningConfig | str = BASE, *, bm: int = 128,
 
 
 @functools.lru_cache(maxsize=256)
+def _quant_matmul_fn(m, n, k, cfg, bits, group, bm, bn, bk, backend):
+    if backend == "ref":
+        return jax.jit(ref.matmul)
+    return jax.jit(_matmul.make_qkernel(m, n, k, cfg, bits=bits, group=group,
+                                        bm=bm, bn=bn, bk=bk,
+                                        interpret=_interpret()))
+
+
+def quant_matmul(a, qw, cfg: CoarseningConfig | str = BASE, *, bm: int = 128,
+                 bn: int = 128, bk: int = 256, backend: str = "pallas"):
+    """Dequant-fused matmul against a QTensor weight: ``a (m,k) @ qw (k,n)``
+    with the packed weight pane DMA'd and dequantized in VMEM once per
+    program.  The tuner spec carries ``wbits``/``group``, so quantized and
+    dense instances of the same geometry occupy DIFFERENT cache keys and can
+    pick different coarsening degrees.  backend='ref' is the dense-dequant
+    oracle."""
+    m, k = a.shape
+    n = qw.shape[-1]
+    if qw.shape != (k, n):
+        raise ValueError(f"quant_matmul: a {a.shape} vs qw {qw.shape}")
+    cfg = resolve_cfg(cfg, "matmul", (m, n, k), dtype=a.dtype.name,
+                      backend=backend, bm=bm, bn=bn, bk=bk,
+                      wbits=qw.bits, group=qw.group)
+    if backend == "ref":
+        from repro.quant.qtypes import dequantize
+        return _quant_matmul_fn(m, n, k, cfg, qw.bits, qw.group, bm, bn, bk,
+                                backend)(a, dequantize(qw))
+    return _quant_matmul_fn(m, n, k, cfg, qw.bits, qw.group, bm, bn, bk,
+                            backend)(a, qw.q, qw.scale)
+
+
+@functools.lru_cache(maxsize=256)
 def _stencil_fn(rows, cols, cfg, block_rows):
-    return jax.jit(_stencil.make_kernel(rows, cols, cfg, block_rows=block_rows))
+    return jax.jit(_stencil.make_kernel(rows, cols, cfg, block_rows=block_rows,
+                                        interpret=_interpret()))
 
 
 def stencil5(x, cfg: CoarseningConfig | str = BASE, *, block_rows: int = 8):
-    cfg = resolve_cfg(cfg, "stencil5", x.shape, block_rows=block_rows)
+    cfg = resolve_cfg(cfg, "stencil5", x.shape, dtype=x.dtype.name,
+                      block_rows=block_rows)
     return _stencil_fn(x.shape[0], x.shape[1], cfg, block_rows)(x)
 
 
 @functools.lru_cache(maxsize=256)
 def _scan_fn(rows, cols, cfg):
-    return jax.jit(_scan.make_kernel(rows, cols, cfg))
+    return jax.jit(_scan.make_kernel(rows, cols, cfg, interpret=_interpret()))
 
 
 def dp_scan(cost, cfg: CoarseningConfig | str = BASE):
-    cfg = resolve_cfg(cfg, "dp_scan", cost.shape)
+    cfg = resolve_cfg(cfg, "dp_scan", cost.shape, dtype=cost.dtype.name)
     return _scan_fn(cost.shape[0], cost.shape[1], cfg)(cost)
 
 
@@ -144,10 +195,11 @@ def _flash_vjp_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv, causal,
     actually runs."""
     fwd = _flash.make_kernel(b, h, hkv, sq, d, cfg, bq=bq, bkv=bkv,
                              causal=causal, window=window, scale=scale,
-                             sk=sk)
+                             sk=sk, interpret=_interpret())
     fwd_res = _flash.make_kernel(b, h, hkv, sq, d, cfg, bq=bq, bkv=bkv,
                                  causal=causal, window=window, scale=scale,
-                                 sk=sk, return_residuals=True)
+                                 sk=sk, return_residuals=True,
+                                 interpret=_interpret())
 
     @jax.custom_vjp
     def attn(q, k, v):
@@ -171,11 +223,12 @@ def _flash_vjp_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv, causal,
                            causal=bool(causal))
         bwd_dq = _flash.make_bwd_dq_kernel(b, h, hkv, sq, d, cfg, bq=bq,
                                            bkv=bkv, causal=causal,
-                                           window=window, scale=scale, sk=sk)
+                                           window=window, scale=scale, sk=sk,
+                                           interpret=_interpret())
         bwd_dkv = _flash.make_bwd_dkv_kernel(b, h, hkv, sq, d, rbwd, bq=bq,
                                              bkv=bkv, causal=causal,
                                              window=window, scale=scale,
-                                             sk=sk)
+                                             sk=sk, interpret=_interpret())
         q, k, v, o, m, l = res
         g = g.astype(jnp.float32)
         delta = jnp.sum(g * o, axis=-1)                # (B,H,Sq) f32
@@ -226,34 +279,56 @@ def flash_attention(q, k, v, cfg: CoarseningConfig | str = BASE, *,
 
 
 @functools.lru_cache(maxsize=256)
-def _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale, backend):
+def _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale, backend,
+               kv_bits=None):
     if backend == "ref":
         return jax.jit(functools.partial(ref.decode_attention, window=window,
                                          scale=scale))
     return jax.jit(_decode.make_kernel(b, h, hkv, s, d, cfg, bkv=bkv,
-                                       window=window, scale=scale))
+                                       window=window, scale=scale,
+                                       kv_bits=kv_bits,
+                                       interpret=_interpret()))
 
 
 def decode_attention(q, k_cache, v_cache, pos, cfg: CoarseningConfig | str = BASE,
                      *, bkv: int = 128, window: int | None = None,
-                     scale: float | None = None, backend: str = "pallas"):
+                     scale: float | None = None, backend: str = "pallas",
+                     k_scale=None, v_scale=None):
     """Split-KV decode attention.  q: (B,1,H,D); caches: (B,S,Hkv,D);
     pos: (B,) int32 -> (B,1,H,D).  The coarsening axis is the kv-block
-    axis (each program owns cfg.degree kv blocks of bkv rows)."""
+    axis (each program owns cfg.degree kv blocks of bkv rows).
+
+    Passing ``k_scale``/``v_scale`` (B,S,Hkv) selects the int8 KV-cache
+    mode: the caches are int8 payloads and the dequant is fused into the
+    kernel's VMEM pass (``kv_bits=8`` on the tuner spec — a distinct cache
+    key from the bf16 instance of the same geometry)."""
     b, _, h, d = q.shape
     s, hkv = k_cache.shape[1], k_cache.shape[2]
+    quant = k_scale is not None
+    kv_bits = 8 if quant else None
+    params = dict(bkv=bkv, window=window or 0)
+    if quant:
+        params["kv_bits"] = 8
     cfg = resolve_cfg(cfg, "decode_attention", (b, h, hkv, s, d),
-                      dtype=k_cache.dtype.name, backend=backend, bkv=bkv,
-                      window=window or 0)
-    return _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale,
-                      backend)(q, k_cache, v_cache, pos)
+                      dtype=k_cache.dtype.name, backend=backend, **params)
+    if backend == "ref" and quant:
+        from repro.quant.qtypes import dequantize_kv
+        k_cache = dequantize_kv(k_cache, k_scale)
+        v_cache = dequantize_kv(v_cache, v_scale)
+        quant = False
+    fn = _decode_fn(b, h, hkv, s, d, cfg, bkv, window, scale, backend,
+                    kv_bits if backend != "ref" else None)
+    if quant:
+        return fn(q, k_cache, v_cache, k_scale, v_scale, pos)
+    return fn(q, k_cache, v_cache, pos)
 
 
 @functools.lru_cache(maxsize=256)
 def _moe_ffn_fn(e, cap, d, f, cfg, backend):
     if backend == "ref":
         return jax.jit(ref.moe_ffn)
-    return jax.jit(_moe_ffn.make_kernel(e, cap, d, f, cfg))
+    return jax.jit(_moe_ffn.make_kernel(e, cap, d, f, cfg,
+                                         interpret=_interpret()))
 
 
 def moe_ffn(xe, w1, w3, w2, wts, cfg: CoarseningConfig | str = BASE, *,
@@ -271,6 +346,36 @@ def moe_ffn(xe, w1, w3, w2, wts, cfg: CoarseningConfig | str = BASE, *,
 
 
 @functools.lru_cache(maxsize=256)
+def _quant_moe_ffn_fn(e, cap, d, f, cfg, bits, group, backend):
+    if backend == "ref":
+        return jax.jit(ref.moe_ffn)
+    return jax.jit(_moe_ffn.make_qkernel(e, cap, d, f, cfg, bits=bits,
+                                         group=group,
+                                         interpret=_interpret()))
+
+
+def quant_moe_ffn(xe, qw1, qw3, qw2, wts, cfg: CoarseningConfig | str = BASE,
+                  *, backend: str = "pallas"):
+    """Grouped-expert fused FFN with QTensor expert weights: the packed
+    w1/w3/w2 panes of each program's ``degree`` experts are DMA'd (one wide
+    packed pane per operand for consecutive, strided for gapped) and
+    dequantized in VMEM once, then the fused gate/up/down chain runs as in
+    ``moe_ffn``.  backend='ref' is the dense-dequant einsum oracle."""
+    e, cap, d = xe.shape
+    f = qw1.shape[-1]
+    cfg = resolve_cfg(cfg, "moe_ffn", (e, cap, d, f), dtype=xe.dtype.name,
+                      backend=backend, wbits=qw1.bits, group=qw1.group)
+    if backend == "ref":
+        from repro.quant.qtypes import dequantize
+        return _quant_moe_ffn_fn(e, cap, d, f, cfg, qw1.bits, qw1.group,
+                                 backend)(xe, dequantize(qw1),
+                                          dequantize(qw3), dequantize(qw2),
+                                          wts)
+    return _quant_moe_ffn_fn(e, cap, d, f, cfg, qw1.bits, qw1.group, backend)(
+        xe, qw1.q, qw1.scale, qw3.q, qw3.scale, qw2.q, qw2.scale, wts)
+
+
+@functools.lru_cache(maxsize=256)
 def _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend):
     if backend == "ref":
         def run(x, dt, a, bmat, cmat):
@@ -279,7 +384,8 @@ def _ssd_fn(b, h, g, s, p, n, cfg, chunk, backend):
                         bmat.transpose(0, 2, 1, 3), cmat.transpose(0, 2, 1, 3))
             return y.transpose(0, 2, 1, 3)
         return jax.jit(run)
-    return jax.jit(_ssd.make_kernel(b, h, g, s, p, n, cfg, chunk=chunk))
+    return jax.jit(_ssd.make_kernel(b, h, g, s, p, n, cfg, chunk=chunk,
+                                     interpret=_interpret()))
 
 
 def ssd(x, dt, a, bmat, cmat, cfg: CoarseningConfig | str = BASE, *,
@@ -295,14 +401,15 @@ def ssd(x, dt, a, bmat, cmat, cfg: CoarseningConfig | str = BASE, *,
 @functools.lru_cache(maxsize=256)
 def _embed_fn(n, vocab, d, cfg, block):
     from repro.kernels import embed_gather as _eg
-    return jax.jit(_eg.make_kernel(n, vocab, d, cfg, block=block))
+    return jax.jit(_eg.make_kernel(n, vocab, d, cfg, block=block,
+                                   interpret=_interpret()))
 
 
 def embed_gather(ids, table, cfg: CoarseningConfig | str = BASE, *,
                  block: int = 256):
     cfg = resolve_cfg(cfg, "embed_gather",
                       (ids.shape[0], table.shape[0], table.shape[1]),
-                      block=block)
+                      dtype=table.dtype.name, block=block)
     return _embed_fn(ids.shape[0], table.shape[0], table.shape[1], cfg,
                      block)(ids, table)
 
@@ -312,7 +419,8 @@ def _rglru_fn(b, s, d, cfg, block_d, block_t, backend):
     if backend == "ref":
         return jax.jit(ref.rglru)
     return jax.jit(_rglru.make_kernel(b, s, d, cfg, block_d=block_d,
-                                      block_t=block_t))
+                                      block_t=block_t,
+                                      interpret=_interpret()))
 
 
 def rglru(x, r, i, a_param, cfg: CoarseningConfig | str = BASE, *,

@@ -10,8 +10,16 @@ fully on-device (a jitted lax.scan over `lm_decode_step` with in-loop
 sampling) between host syncs.  Decode attention dispatches to the coarsened
 split-KV kernel when the model config selects ``decode_backend='pallas'``.
 
+``--quant int8|int4`` serves weight-only-quantized params (repro.quant;
+dequant-fused kernels where the geometry allows, dense-dequant fallback
+elsewhere) and ``--kv-quant int8`` switches the K/V cache to int8 payloads
+with per-(token, kv-head) scales, quantized on append — together they
+roughly double the slots*max_len a host can hold; the driver prints the
+weight/cache memory next to tok/s.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --slots 4 --requests 8 --prompt-len 32 --chunk 16 --gen-tokens 16
+      --slots 4 --requests 8 --prompt-len 32 --chunk 16 --gen-tokens 16 \
+      --quant int8 --kv-quant int8
 """
 from __future__ import annotations
 
@@ -33,13 +41,22 @@ from repro.models.config import ModelConfig
 def _slot_reset(cache, slot):
     """Zero one slot's rows across every cache leaf in a single jitted
     scatter (stacked block leaves carry batch on axis 1, tail on axis 0) —
-    no whole-tree re-materialization per admission."""
+    no whole-tree re-materialization per admission.  Zeros are scattered in
+    each leaf's own dtype (int8 payloads of a quantized KV cache included)."""
     return {
-        "blocks": [jax.tree.map(lambda a: a.at[:, slot].set(0.0), c)
-                   for c in cache["blocks"]],
-        "tail": [jax.tree.map(lambda a: a.at[slot].set(0.0), c)
-                 for c in cache["tail"]],
+        "blocks": [jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), c)
+            for c in cache["blocks"]],
+        "tail": [jax.tree.map(
+            lambda a: a.at[slot].set(jnp.zeros((), a.dtype)), c)
+            for c in cache["tail"]],
     }
+
+
+def _tree_mib(tree) -> float:
+    """Total leaf bytes of a pytree (concrete or eval_shape structs), MiB."""
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree) if hasattr(x, "dtype")) / 2**20
 
 
 class BatchedServer:
@@ -47,11 +64,22 @@ class BatchedServer:
                  chunk: int = 16, decode_block: int = 1,
                  temperature: float = 0.0, seed: int = 0,
                  tune: str | None = None, decode_backend: str | None = None,
-                 moe_backend: str | None = None):
+                 moe_backend: str | None = None, quant: str | None = None,
+                 kv_quant: str | None = None):
         if decode_backend is not None:
             cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
         if moe_backend is not None:
             cfg = dataclasses.replace(cfg, moe_backend=moe_backend)
+        if quant is not None:
+            cfg = dataclasses.replace(cfg, quant=quant)
+        if kv_quant is not None:
+            cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+        self.weight_mib_dense = _tree_mib(params)
+        self.quant_report = None
+        if cfg.quant in ("int8", "int4"):
+            from repro.quant import quantize_params
+            params, self.quant_report = quantize_params(
+                params, cfg.quant, group=cfg.quant_group)
         if tune:
             # pre-tune the kernel families this server's hot loops hit: the
             # ops-level streams at prompt-ingest scale plus the split-KV
@@ -62,8 +90,16 @@ class BatchedServer:
         self.slots, self.max_len = slots, max_len
         self.chunk, self.decode_block = chunk, decode_block
         self.temperature = temperature
+        self.weight_mib = _tree_mib(params)
         self.cache = M.lm_init_cache(cfg, slots, max_len,
                                      enc_len=min(max_len, 64))
+        # the serving headline: quantized weights + int8 KV cut the bytes
+        # that bound slots*max_len per host — report both against dense
+        self.cache_mib = _tree_mib(self.cache)
+        dense_cfg = dataclasses.replace(cfg, kv_quant="none")
+        self.cache_mib_dense = _tree_mib(jax.eval_shape(
+            lambda: M.lm_init_cache(dense_cfg, slots, max_len,
+                                    enc_len=min(max_len, 64))))
         self.pos = np.zeros((slots,), np.int32)
         self.active = np.zeros((slots,), bool)
         self.outputs: list[list[int]] = [[] for _ in range(slots)]
@@ -204,6 +240,15 @@ def main():
                     choices=[None, "ref", "pallas"],
                     help="expert FFN path (pallas = fused grouped-expert "
                          "kernel, expert-axis coarsening)")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "none", "int8", "int4"],
+                    help="weight-only quantization of FFN/MoE/attention "
+                         "projections (repro.quant; dequant-fused kernels "
+                         "where geometry allows, dense-dequant elsewhere)")
+    ap.add_argument("--kv-quant", default=None, choices=[None, "none", "int8"],
+                    help="int8 KV cache: quantize-on-append, dequant fused "
+                         "into the split-KV decode kernel (~2x the "
+                         "slots*max_len a host can hold)")
     from repro.tune import TUNE_CHOICES
     ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
                     help="warm the coarsening tuning cache before serving")
@@ -217,7 +262,8 @@ def main():
                            max_len=args.max_len, chunk=args.chunk,
                            decode_block=args.decode_block, tune=args.tune,
                            decode_backend=args.decode_backend,
-                           moe_backend=args.moe_backend)
+                           moe_backend=args.moe_backend, quant=args.quant,
+                           kv_quant=args.kv_quant)
 
     rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))
@@ -239,6 +285,12 @@ def main():
           f" | decode: {server.decoded_tokens} tok in {server.decode_s:.2f}s "
           f"({server.decoded_tokens / max(server.decode_s, 1e-9):.1f} tok/s)"
           f" (CPU interpret-scale)")
+    print(f"memory: weights {server.weight_mib:.2f} MiB "
+          f"(dense {server.weight_mib_dense:.2f} MiB, "
+          f"{server.weight_mib_dense / max(server.weight_mib, 1e-9):.2f}x) | "
+          f"kv cache {server.cache_mib:.2f} MiB "
+          f"(bf16 {server.cache_mib_dense:.2f} MiB, "
+          f"{server.cache_mib_dense / max(server.cache_mib, 1e-9):.2f}x)")
     print("sample output:", server.completed[0][:8] if server.completed
           else server.outputs[0][:8])
 

@@ -41,7 +41,8 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
           ckpt_dir: str | None, n_micro: int = 1, remat: str = "none",
           lr: float = 3e-4, save_every: int = 50, seed: int = 0,
           log_every: int = 10, mesh: Mesh | None = None,
-          fail_at_step: int | None = None, tune: str | None = None):
+          fail_at_step: int | None = None, tune: str | None = None,
+          quant: str | None = None):
     if tune:
         # pre-tune the ops-level kernel families at this run's geometry so
         # any cfg="auto" dispatch resolves from the persisted cache instead
@@ -52,11 +53,35 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
         warm_from_flag(cfg, tune, seq=seq, batch=batch)
     mesh = mesh or make_mesh_for_host()
     with mesh:
-        return _train_in_mesh(cfg, steps=steps, batch=batch, seq=seq,
-                              ckpt_dir=ckpt_dir, n_micro=n_micro, remat=remat,
-                              lr=lr, save_every=save_every, seed=seed,
-                              log_every=log_every, mesh=mesh,
-                              fail_at_step=fail_at_step)
+        losses, params = _train_in_mesh(
+            cfg, steps=steps, batch=batch, seq=seq, ckpt_dir=ckpt_dir,
+            n_micro=n_micro, remat=remat, lr=lr, save_every=save_every,
+            seed=seed, log_every=log_every, mesh=mesh,
+            fail_at_step=fail_at_step)
+    if quant and quant != "none":
+        _quant_eval(cfg, params, quant, batch=batch, seq=seq, seed=seed)
+    return losses, params
+
+
+def _quant_eval(cfg: ModelConfig, params, quant: str, *, batch, seq, seed):
+    """Post-training weight-only quantization report: quantize the trained
+    params (repro.quant) and compare the eval loss on one held-out batch
+    against the f32 path — the serving-readiness parity check for --quant."""
+    from repro.quant import quantize_params, tree_nbytes
+    data = TokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=seq, global_batch=batch, seed=seed + 991,
+        frontend=cfg.frontend, d_model=cfg.d_model,
+        src_len=min(seq, 512), is_encdec=cfg.is_encdec))
+    hb = jax.tree.map(jnp.asarray, data.next_batch())
+    loss_f = jax.jit(lambda p, b: M.lm_loss(p, b, cfg)[0])
+    dense = float(loss_f(params, hb))
+    qparams, rep = quantize_params(params, quant, group=cfg.quant_group)
+    quant_loss = float(loss_f(qparams, hb))
+    print(f"quant[{quant}]: eval loss {quant_loss:.4f} vs f32 {dense:.4f} "
+          f"(delta {quant_loss - dense:+.4f}); params "
+          f"{tree_nbytes(params) / 2**20:.2f} -> "
+          f"{tree_nbytes(qparams) / 2**20:.2f} MiB "
+          f"({rep['quantized']} leaves quantized)")
 
 
 def _train_in_mesh(cfg: ModelConfig, *, steps, batch, seq, ckpt_dir, n_micro,
@@ -153,6 +178,11 @@ def main():
                          "blocks through the coarsened custom-VJP flash "
                          "kernel (attn_cfg/attn_bwd_cfg from the tuning "
                          "cache --tune warms)")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "none", "int8", "int4"],
+                    help="after training, quantize the weights (repro.quant "
+                         "weight-only) and report the eval-loss delta vs "
+                         "f32 on a held-out batch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -164,7 +194,8 @@ def main():
     losses, _ = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                       ckpt_dir=args.ckpt_dir, n_micro=args.n_micro,
                       remat=args.remat, lr=args.lr,
-                      save_every=args.save_every, tune=args.tune)
+                      save_every=args.save_every, tune=args.tune,
+                      quant=args.quant)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 
 

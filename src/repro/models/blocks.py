@@ -51,7 +51,7 @@ def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
     k = shard.constrain_heads(k, cfg.n_kv_heads)
     o = L.flash_attention(q, k, v, causal=True, window=window, q_pos=pos,
                           pos_trivial=pos_trivial, **_attn_kw(cfg))
-    o = o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    o = o.reshape(x.shape[0], x.shape[1], -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     aux = 0.0
@@ -65,20 +65,32 @@ def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
 
 def attn_block_decode(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
                       shard: ShardCtx = NOSHARD):
-    """x: (B,1,d); cache: {'k','v'} (B,S,kv,hd); pos: (B,)."""
+    """x: (B,1,d); cache: {'k','v'[,'k_scale','v_scale']} (B,S,kv,hd);
+    pos: (B,).  A quantized cache (cfg.kv_quant="int8", marked by the scale
+    leaves) QUANTIZES ON APPEND: the new row is absmax-scaled per kv-head
+    before the scatter, and the scales ride to the attention dispatch."""
     window = cfg.window if kind == ATTN_LOCAL else None
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos[:, None])
     bidx = jnp.arange(x.shape[0])
+    quant = "k_scale" in cache
     # barrier: stops XLA from fusing the (f32 rope) -> bf16 convert into the
     # cache scatter, which would materialize the WHOLE cache in f32
     k_upd, v_upd = jax.lax.optimization_barrier((k[:, 0], v[:, 0]))
+    kscale = vscale = None
+    if quant:
+        from repro.quant.qtypes import quantize_kv
+        k_upd, ks_new = quantize_kv(k_upd.astype(jnp.float32))
+        v_upd, vs_new = quantize_kv(v_upd.astype(jnp.float32))
+        kscale = cache["k_scale"].at[bidx, pos].set(ks_new)
+        vscale = cache["v_scale"].at[bidx, pos].set(vs_new)
     kc = cache["k"].at[bidx, pos].set(k_upd)
     vc = cache["v"].at[bidx, pos].set(v_upd)
     o = L.decode_attention(q, kc, vc, pos, window=window,
                            backend=cfg.decode_backend,
-                           cfg=cfg.decode_attn_cfg, bkv=cfg.decode_bkv)
-    o = o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+                           cfg=cfg.decode_attn_cfg, bkv=cfg.decode_bkv,
+                           k_scale=kscale, v_scale=vscale)
+    o = o.reshape(x.shape[0], 1, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if cfg.n_experts:
@@ -86,7 +98,10 @@ def attn_block_decode(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
                      capacity=max(4, min(x.shape[0], 4 * cfg.top_k)))
     else:
         y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
-    return x + y, {"k": kc, "v": vc}
+    newc = {"k": kc, "v": vc}
+    if quant:
+        newc.update(k_scale=kscale, v_scale=vscale)
+    return x + y, newc
 
 
 def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
@@ -102,17 +117,36 @@ def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
     bidx = jnp.arange(b)
-    # same barrier as the decode step: keep the f32 rope -> storage-dtype
-    # convert out of the cache scatter so the whole cache never goes f32
-    k_upd, v_upd = jax.lax.optimization_barrier(
-        (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
+    quant = "k_scale" in cache
+    newc = {}
+    if quant:
+        # quantize-on-append, chunk rows at once: (B,T,kv,hd) -> int8 +
+        # per-(token, kv-head) scales, matching the decode step exactly so
+        # chunked ingestion composes with per-token decode
+        from repro.quant.qtypes import quantize_kv
+        kq, ks_new = quantize_kv(k.astype(jnp.float32))
+        vq, vs_new = quantize_kv(v.astype(jnp.float32))
+        k_upd, v_upd = jax.lax.optimization_barrier((kq, vq))
+        newc["k_scale"] = cache["k_scale"].at[bidx[:, None], pos].set(ks_new)
+        newc["v_scale"] = cache["v_scale"].at[bidx[:, None], pos].set(vs_new)
+    else:
+        # same barrier as the decode step: keep the f32 rope -> storage-dtype
+        # convert out of the cache scatter so the whole cache never goes f32
+        k_upd, v_upd = jax.lax.optimization_barrier(
+            (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
     kc = cache["k"].at[bidx[:, None], pos].set(k_upd)
     vc = cache["v"].at[bidx[:, None], pos].set(v_upd)
+    if quant:
+        from repro.quant.qtypes import dequantize_kv
+        ka = dequantize_kv(kc, newc["k_scale"]).astype(x.dtype)
+        va = dequantize_kv(vc, newc["v_scale"]).astype(x.dtype)
+    else:
+        ka, va = kc, vc
     # chunk rows sit at ragged global positions inside a padded cache: the
     # dispatch always falls back to mea here (pos_trivial=False), by design
-    o = L.flash_attention(q, kc, vc, causal=True, window=window, q_pos=pos,
+    o = L.flash_attention(q, ka, va, causal=True, window=window, q_pos=pos,
                           **_attn_kw(cfg))
-    o = o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
+    o = o.reshape(b, t, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if cfg.n_experts:
@@ -121,10 +155,20 @@ def attn_block_prefill(p, x, cfg: ModelConfig, cache, *, kind: str, pos0):
         y, _ = L.moe(p["moe"], h, cfg, capacity=b * t)
     else:
         y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
-    return x + y, {"k": kc, "v": vc}
+    return x + y, {"k": kc, "v": vc, **newc}
 
 
 def attn_cache_init(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16):
+    """Decode K/V cache.  cfg.kv_quant="int8" allocates int8 payloads plus
+    per-(token, kv-head) f32 scales — ~half the bytes of a bf16 cache, which
+    is what roughly doubles the slots*max_len a host can hold.  (Enc-dec
+    self-attn caches stay dense: the decoder blocks there don't carry the
+    quantize-on-append path.)"""
+    if cfg.kv_quant == "int8" and not cfg.is_encdec:
+        return {"k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                "k_scale": jnp.zeros((b, s_max, cfg.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((b, s_max, cfg.n_kv_heads), jnp.float32)}
     return {"k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype),
             "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype)}
 
@@ -171,7 +215,7 @@ def rglru_block(p, x, cfg: ModelConfig, *, shard: ShardCtx = NOSHARD):
 
 def _rglru_out(p, dtype):
     # out proj: reuse wgate^T shape (dr, d) — stored lazily as its own param
-    return p["wo"].astype(dtype)
+    return L.asdense(p["wo"], dtype)
 
 
 def rglru_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
@@ -357,7 +401,7 @@ def enc_block(p, x, cfg: ModelConfig, *, pos, shard: ShardCtx = NOSHARD):
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
     # non-causal: mask-free, so kernel eligibility needs no trivial-pos proof
     o = L.flash_attention(q, k, v, causal=False, q_pos=pos, **_attn_kw(cfg))
-    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
 
@@ -375,18 +419,18 @@ def dec_block_init(key, cfg: ModelConfig):
 def _cross_attention(p, x, enc_kv, cfg: ModelConfig):
     b, s, _ = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, nq, hd)
+    q = (x @ L.asdense(p["wq"], x.dtype)).reshape(b, s, nq, hd)
     k, v = enc_kv
     # non-causal cross attention: the kernel serves Sq != Sk geometries
     return L.flash_attention(q, k, v, causal=False,
                              **_attn_kw(cfg)).reshape(b, s, -1) \
-        @ p["wo"].astype(x.dtype)
+        @ L.asdense(p["wo"], x.dtype)
 
 
 def enc_kv(p, enc_out, cfg: ModelConfig):
     b, s, _ = enc_out.shape
-    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
-    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    k = (enc_out @ L.asdense(p["wk"], enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ L.asdense(p["wv"], enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
     return k, v
 
 
@@ -397,7 +441,7 @@ def dec_block(p, x, cfg: ModelConfig, *, pos, enc_out,
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
     o = L.flash_attention(q, k, v, causal=True, q_pos=pos,
                           pos_trivial=pos_trivial, **_attn_kw(cfg))
-    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o.reshape(x.shape[0], x.shape[1], -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     kv = enc_kv_pre if enc_kv_pre is not None \
         else enc_kv(p["xattn"], enc_out, cfg)
@@ -421,7 +465,7 @@ def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
     # attn_block_prefill
     o = L.flash_attention(q, kc, vc, causal=True, q_pos=pos,
                           **_attn_kw(cfg))
-    x = x + o.reshape(b, t, -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o.reshape(b, t, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,
                              (cache["enc_k"], cache["enc_v"]), cfg)
@@ -439,7 +483,7 @@ def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     vc = cache["v"].at[bidx, pos].set(v[:, 0])
     o = L.decode_attention(q, kc, vc, pos, backend=cfg.decode_backend,
                            cfg=cfg.decode_attn_cfg, bkv=cfg.decode_bkv)
-    x = x + o.reshape(x.shape[0], 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o.reshape(x.shape[0], 1, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,
                              (cache["enc_k"], cache["enc_v"]), cfg)

@@ -101,6 +101,21 @@ class ModelConfig:
     attn_bq: int = 128
     attn_bkv: int = 128
 
+    # weight-only quantization (repro.quant): "none" | "int8" (per-channel
+    # symmetric) | "int4" (group-wise, quant_group rows per scale).  The
+    # field records the format `quantize_params` applied to this model's
+    # FFN / MoE-expert / attention-projection weights; dispatch then uses
+    # the dequant-fused kernels where the backend+geometry allow and the
+    # dense-dequant fallback (the parity oracle) everywhere else.
+    quant: str = "none"
+    quant_group: int = 32
+    # KV-cache quantization: "none" | "int8" — int8 caches store an int8
+    # payload plus per-(token, kv-head) f32 scales, quantize on append
+    # (decode and prefill) and dequantize fused inside the split-KV kernel
+    # (or densely on the ref path).  Halves the decode hot path's dominant
+    # traffic AND the bytes that bound slots*max_len per host.
+    kv_quant: str = "none"
+
     # ---- derived ----
     @property
     def vocab_padded(self) -> int:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.config import ModelConfig
+from repro.quant.qtypes import QTensor, asdense, dequantize, dequantize_kv
 
 Params = dict
 
@@ -340,7 +341,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_pos=None,
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,
-                     backend: str = "ref", cfg="auto", bkv: int = 128):
+                     backend: str = "ref", cfg="auto", bkv: int = 128,
+                     k_scale=None, v_scale=None):
     """Single-token attention against a cache.  q: (B,1,H,D);
     caches: (B,S,Hkv,D); pos: (B,) current position (0-based).
 
@@ -349,6 +351,11 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,
     "auto") when the cache geometry tiles; anything the kernel cannot
     serve falls back to the dense full-length einsum below — which is also
     the parity oracle the kernel is tested against.
+
+    ``k_scale``/``v_scale`` (B,S,Hkv) mark an int8-quantized cache
+    (cfg.kv_quant="int8"): the kernel fuses the dequant into its VMEM pass
+    (kv_bits=8 — a separate tuner cache key from the bf16 geometry); the
+    dense fallback dequantizes the whole cache first.
     """
     b, _, h, d = q.shape
     if backend == "pallas":
@@ -356,16 +363,23 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,
         blk = min(bkv, s_all)
         if h % hkv_all == 0 and s_all % blk == 0:
             from repro.kernels import ops
+            params = dict(bkv=blk, window=window or 0)
+            if k_scale is not None:
+                params["kv_bits"] = 8
             rcfg = ops.resolve_cfg(cfg, "decode_attention",
                                    (b, h, hkv_all, s_all, d),
                                    dtype=k_cache.dtype.name,
-                                   backend="pallas", bkv=blk,
-                                   window=window or 0)
+                                   backend="pallas", **params)
             # an explicit degree the cache length can't tile falls back too
             if s_all % (blk * rcfg.degree) == 0:
                 return ops.decode_attention(q, k_cache, v_cache, pos, rcfg,
                                             bkv=blk, window=window,
-                                            scale=scale)
+                                            scale=scale, k_scale=k_scale,
+                                            v_scale=v_scale)
+    if k_scale is not None:
+        # dense-dequant fallback (and the parity oracle for the fused path)
+        k_cache = dequantize_kv(k_cache, k_scale)
+        v_cache = dequantize_kv(v_cache, v_scale)
     s, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
@@ -414,9 +428,11 @@ def qkv_project(p, x, cfg: ModelConfig, pos, *, mrope_pos3=None):
     """x: (B,S,d) -> q (B,S,H,hd), k,v (B,S,Hkv,hd) with rope applied."""
     b, s, _ = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    q = x @ p["wq"].astype(x.dtype)
-    k = x @ p["wk"].astype(x.dtype)
-    v = x @ p["wv"].astype(x.dtype)
+    # asdense: quantized (QTensor) projections take the dense-dequant path —
+    # the qkv matmuls are a small slice of a step next to FFN/cache traffic
+    q = x @ asdense(p["wq"], x.dtype)
+    k = x @ asdense(p["wk"], x.dtype)
+    v = x @ asdense(p["wv"], x.dtype)
     if cfg.qkv_bias:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -457,14 +473,29 @@ def ffn(p, x, *, backend: str = "ref", cfg="auto"):
     unchanged); backend="pallas" dispatches the blocked coarsenable kernel
     with cfg="auto" resolved through repro.tune.  Geometries the kernel's
     default (bm=128, bn=128, bk=256) blocks can't tile fall back to the
-    passthrough."""
+    passthrough.
+
+    Quantized weights (QTensor leaves, written by repro.quant
+    ``quantize_params``) dispatch the dequant-fused kernel through
+    ops.quant_matmul when backend="pallas" and the geometry tiles —
+    packed weight panes, dequant in VMEM, its own tuner cache key — and
+    otherwise take the dense-dequant fallback, which is also the parity
+    oracle tests/test_quant.py checks the kernel against."""
     from repro.kernels import ops
-    w1 = p["w1"].astype(x.dtype)
-    w3 = p["w3"].astype(x.dtype)
-    w2 = p["w2"].astype(x.dtype)
     shp = x.shape
     xt = x.reshape(-1, shp[-1])
     t, d = xt.shape
+    if isinstance(p["w1"], QTensor):
+        d_ff = p["w1"].shape[-1]
+        g = p["w1"].group or 256
+        if backend == "pallas" and not (t % 128 or d % 256 or d_ff % 256
+                                        or 256 % g):
+            qmm = lambda a, qw: ops.quant_matmul(a, qw, cfg).astype(x.dtype)
+            h = jax.nn.silu(qmm(xt, p["w1"])) * qmm(xt, p["w3"])
+            return qmm(h, p["w2"]).reshape(shp)
+    w1 = asdense(p["w1"], x.dtype)
+    w3 = asdense(p["w3"], x.dtype)
+    w2 = asdense(p["w2"], x.dtype)
     d_ff = w1.shape[1]
     be = backend
     if be == "pallas" and (t % 128 or d % 256 or d_ff % 256):
@@ -512,17 +543,34 @@ def moe_expert_ffn(xe, w1, w3, w2, comb, cfg: ModelConfig):
     (cfg.moe_ffn_cfg resolved through repro.tune for "auto"); the einsum
     chain below is the oracle the kernel is tested against and the
     automatic fallback for degrees the expert count can't tile.
+
+    Quantized expert weights (QTensor) dispatch the dequant-fused variant
+    (ops.quant_moe_ffn: packed expert panes + per-program VMEM dequant)
+    when the backend and int4 group geometry allow, else they dequantize
+    densely and run the einsum oracle.
     """
     e, c, d = xe.shape
     f = w1.shape[-1]
+    quant = isinstance(w1, QTensor)
     if cfg.moe_backend == "pallas":
         from repro.kernels import ops
-        rcfg = ops.resolve_cfg(cfg.moe_ffn_cfg, "moe_ffn", (e, c, d, f),
-                               dtype=xe.dtype.name, backend="pallas")
-        # an explicit degree the expert axis can't tile falls back too
-        if e % rcfg.degree == 0:
-            return ops.moe_ffn(xe, w1.astype(xe.dtype), w3.astype(xe.dtype),
-                               w2.astype(xe.dtype), comb, rcfg)
+        if quant:
+            if w1.bits == 8 or (d % w1.group == 0 and f % w1.group == 0):
+                rcfg = ops.resolve_cfg(cfg.moe_ffn_cfg, "moe_ffn",
+                                       (e, c, d, f), dtype=xe.dtype.name,
+                                       backend="pallas", wbits=w1.bits,
+                                       group=w1.group)
+                if e % rcfg.degree == 0:
+                    return ops.quant_moe_ffn(xe, w1, w3, w2, comb, rcfg)
+        else:
+            rcfg = ops.resolve_cfg(cfg.moe_ffn_cfg, "moe_ffn", (e, c, d, f),
+                                   dtype=xe.dtype.name, backend="pallas")
+            # an explicit degree the expert axis can't tile falls back too
+            if e % rcfg.degree == 0:
+                return ops.moe_ffn(xe, w1.astype(xe.dtype),
+                                   w3.astype(xe.dtype),
+                                   w2.astype(xe.dtype), comb, rcfg)
+    w1, w3, w2 = (asdense(w) for w in (w1, w3, w2))
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1.astype(xe.dtype)))
     h = h * jnp.einsum("ecd,edf->ecf", xe, w3.astype(xe.dtype))
     ye = jnp.einsum("ecf,efd->ecd", h, w2.astype(xe.dtype))
@@ -607,7 +655,11 @@ def _moe_shardmap(p, x, cfg: ModelConfig, *, capacity, renorm,
     e_l = e_pad // tp
 
     xt = x.reshape(t, d)
-    w1, w3, w2 = p["w1"], p["w3"], p["w2"]   # already padded to e_pad
+    # quantized expert weights dequantize up front on the shard_map path:
+    # QTensor leaves can't ride through the per-axis PartitionSpecs below
+    # (payload and scales shard differently), so EP keeps the dense-dequant
+    # fallback; the single-shard path gets the fused quantized kernel
+    w1, w3, w2 = (asdense(p[k]) for k in ("w1", "w3", "w2"))
     router = p["router"]
 
     def body(xt_l, router_, w1_l, w3_l, w2_l):

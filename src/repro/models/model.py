@@ -236,11 +236,13 @@ def _encdec_apply(params, batch, cfg, *, shard, moe_capacity, remat,
         # batched einsum BEFORE the scan, so enc_x (the big activation) is
         # consumed once instead of being re-broadcast into every loop
         # iteration.
-        wk = xs["xattn"]["wk"]                       # (L, d, kv*hd)
-        wv = xs["xattn"]["wv"]
+        # asdense: the stacked xattn projections are QTensors when the
+        # params are weight-quantized (dense-dequant fallback path)
+        wk = L.asdense(xs["xattn"]["wk"], enc_x.dtype)   # (L, d, kv*hd)
+        wv = L.asdense(xs["xattn"]["wv"], enc_x.dtype)
         se = enc_x.shape[1]
-        ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk.astype(enc_x.dtype))
-        ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv.astype(enc_x.dtype))
+        ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk)
+        ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv)
         ek = ek.reshape(ek.shape[0], b, se, cfg.n_kv_heads, cfg.hd)
         ev = ev.reshape(ev.shape[0], b, se, cfg.n_kv_heads, cfg.hd)
         scan_xs = (xs, (ek, ev))
@@ -423,9 +425,10 @@ def _prefill_enc_cache(params, batch, cfg, cache):
     if s_src > el:
         raise ValueError(f"encoder length {s_src} exceeds enc cache {el}")
     xs = params["blocks"][0]
-    wk, wv = xs["xattn"]["wk"], xs["xattn"]["wv"]            # (L, d, kv*hd)
-    ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk.astype(enc_x.dtype))
-    ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv.astype(enc_x.dtype))
+    wk = L.asdense(xs["xattn"]["wk"], enc_x.dtype)           # (L, d, kv*hd)
+    wv = L.asdense(xs["xattn"]["wv"], enc_x.dtype)
+    ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk)
+    ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv)
     np_, kvh, hd = ek.shape[0], cfg.n_kv_heads, cfg.hd
     ek = ek.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_k"].dtype)
     ev = ev.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_v"].dtype)

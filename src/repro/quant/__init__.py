@@ -1,0 +1,26 @@
+"""repro.quant — weight-only int8/int4 quantization with dequant-fused
+coarsened kernels.
+
+``qtypes`` defines the formats (per-channel int8, group-wise packed int4),
+the ``QTensor`` pytree, the one-pass absmax calibrator and the
+``quantize_params`` entry point.  The fused kernels live next to their
+dense siblings (kernels/matmul.py ``make_qkernel``, kernels/moe_ffn.py
+``make_qkernel``, kernels/decode_attention.py ``kv_bits=8``) and dispatch
+through ``kernels.ops.quant_matmul`` / ``ops.quant_moe_ffn`` /
+``ops.decode_attention``; the tuner prices the packed byte and dequant
+terms (core/analysis) so quantized specs can pick DIFFERENT coarsening
+degrees than dense ones.
+"""
+from repro.quant.qtypes import (DEFAULT_GROUP, INT4_QMAX, INT8_QMAX,
+                                QUANT_KEYS, QTensor, asdense,
+                                calibrate_absmax, dequantize, dequantize_kv,
+                                pack_int4, quantize, quantize_int4,
+                                quantize_int8, quantize_kv, quantize_params,
+                                tree_nbytes, unpack_int4)
+
+__all__ = [
+    "DEFAULT_GROUP", "INT4_QMAX", "INT8_QMAX", "QUANT_KEYS", "QTensor",
+    "asdense", "calibrate_absmax", "dequantize", "dequantize_kv",
+    "pack_int4", "quantize", "quantize_int4", "quantize_int8",
+    "quantize_kv", "quantize_params", "tree_nbytes", "unpack_int4",
+]

@@ -1,0 +1,258 @@
+"""Weight-only quantization formats: per-channel int8 and group-wise int4.
+
+The paper's central trade is work-per-program against resource cost;
+quantization sharpens both sides of it.  A packed int8/int4 weight pane is
+2-4x fewer bytes for the SAME coarsened DMA (one *wide* packed pane per
+operand for consecutive degrees, strided panes for gapped), and the per-pane
+dequant (unpack + scale-multiply) is per-program overhead that coarsening
+amortizes exactly like the paper's per-work-item loop overhead (§III.B).
+
+Formats
+-------
+int8  per-(output-)channel symmetric: for a weight laid out (..., K, N) with
+      K the contraction axis, ``scale = absmax over K / 127`` has shape
+      (..., 1, N); the payload is int8 of the same logical shape.
+
+int4  group-wise symmetric: the contraction axis is cut into groups of
+      ``group`` rows; ``scale`` has shape (..., K/group, N) and the payload
+      packs two 4-bit values per byte along K -> (..., K/2, N) uint8.
+      Values are stored offset-binary (q + 8 in [1, 15]) so both nibbles
+      stay unsigned; the symmetric range is [-7, 7] (absmax maps to 7).
+
+Both formats are exact at the absmax (no clip error), so the round-trip
+error is bounded by scale/2 elementwise — the property
+tests/test_quant.py checks with hypothesis.
+
+``QTensor`` is a registered pytree (payload + scales are leaves; bits /
+group / logical shape are static), so quantized params trees jit, donate
+and tree-map like dense ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+INT4_QMAX = 7.0
+DEFAULT_GROUP = 32
+
+# param-dict keys quantize_params converts (FFN + MoE expert weights +
+# attention projections); everything else — embeddings, lm_head, norms,
+# router, conv/recurrent/SSM mixers — stays dense.
+QUANT_KEYS = frozenset({"w1", "w3", "w2", "wq", "wk", "wv", "wo"})
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """A quantized weight: packed payload + scales + static metadata.
+
+    q      int8 payload (int8 mode) or uint8 nibble-packed payload (int4)
+    scale  f32 scales: (..., 1, N) per-channel / (..., K/group, N) grouped
+    bits   8 | 4
+    group  contraction-group size (0 for per-channel int8)
+    shape  the LOGICAL (unpacked, dense) weight shape
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    bits: int
+    group: int
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits, self.group, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        bits, group, shape = aux
+        return cls(q=q, scale=scale, bits=bits, group=group, shape=shape)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q.size * self.q.dtype.itemsize
+                   + self.scale.size * self.scale.dtype.itemsize)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack int values in [-7, 7] two-per-byte along ``axis`` (offset-binary:
+    stored nibble = q + 8).  The packed axis must have even length."""
+    k = q.shape[axis]
+    if k % 2:
+        raise ValueError(f"int4 pack axis length {k} must be even")
+    u = (q + 8).astype(jnp.uint8)
+    lo = jax.lax.slice_in_dim(u, 0, k, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(u, 1, k, stride=2, axis=axis)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed: jax.Array, axis: int = -2) -> jax.Array:
+    """Inverse of pack_int4: (..., K/2, ...) uint8 -> (..., K, ...) f32 in
+    [-7, 7] (even logical rows from the low nibble, odd from the high)."""
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = (packed >> 4).astype(jnp.float32) - 8.0
+    ax = axis % packed.ndim
+    stacked = jnp.stack([lo, hi], axis=ax + 1)       # (..., K/2, 2, ...)
+    shape = list(packed.shape)
+    shape[ax] = 2 * shape[ax]
+    return stacked.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def _absmax(w: jax.Array, axis: int, keepdims: bool = True) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis,
+                               keepdims=keepdims), 1e-8)
+
+
+def quantize_int8(w: jax.Array) -> QTensor:
+    """Per-channel symmetric int8 over the contraction axis (-2)."""
+    if w.ndim < 2:
+        raise ValueError(f"need a >=2-D weight, got shape {w.shape}")
+    scale = _absmax(w, axis=-2) / INT8_QMAX               # (..., 1, N)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return QTensor(q=q, scale=scale.astype(jnp.float32), bits=8, group=0,
+                   shape=tuple(w.shape))
+
+
+def quantize_int4(w: jax.Array, group: int = DEFAULT_GROUP) -> QTensor:
+    """Group-wise symmetric int4 along the contraction axis (-2), packed
+    two-per-byte."""
+    if w.ndim < 2:
+        raise ValueError(f"need a >=2-D weight, got shape {w.shape}")
+    k, n = w.shape[-2], w.shape[-1]
+    if group < 2 or group % 2:
+        raise ValueError(f"int4 group must be even and >= 2, got {group}")
+    if k % group:
+        raise ValueError(f"contraction dim {k} not divisible by group {group}")
+    lead = w.shape[:-2]
+    wg = w.astype(jnp.float32).reshape(lead + (k // group, group, n))
+    scale = _absmax(wg, axis=-2) / INT4_QMAX              # (..., K/g, 1, N)
+    q = jnp.clip(jnp.round(wg / scale), -INT4_QMAX, INT4_QMAX)
+    q = q.reshape(lead + (k, n)).astype(jnp.int8)
+    return QTensor(q=pack_int4(q, axis=-2),
+                   scale=scale.reshape(lead + (k // group, n)).astype(
+                       jnp.float32),
+                   bits=4, group=group, shape=tuple(w.shape))
+
+
+def quantize(w: jax.Array, mode: str, group: int = DEFAULT_GROUP) -> QTensor:
+    if mode == "int8":
+        return quantize_int8(w)
+    if mode == "int4":
+        return quantize_int4(w, group=group)
+    raise ValueError(f"unknown quant mode {mode!r} (want 'int8' or 'int4')")
+
+
+def dequantize(qt: QTensor) -> jax.Array:
+    """QTensor -> dense f32 of the logical shape (the parity oracle every
+    fused dequant kernel is tested against)."""
+    if qt.bits == 8:
+        return qt.q.astype(jnp.float32) * qt.scale
+    vals = unpack_int4(qt.q, axis=-2)                     # (..., K, N)
+    scale = jnp.repeat(qt.scale, qt.group, axis=-2)       # (..., K, N)
+    return vals * scale
+
+
+def asdense(w, dtype=None):
+    """QTensor -> dequantized dense array; dense array -> (cast) passthrough.
+    The one-line dense-dequant fallback every weight consumer can use."""
+    out = dequantize(w) if isinstance(w, QTensor) else w
+    return out if dtype is None else out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (per-token, per-kv-head)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array):
+    """Quantize cache rows on append: x (..., D) -> (int8 (..., D),
+    scale (...,) f32) with a symmetric absmax scale per leading index
+    (per token x kv-head)."""
+    amax = _absmax(x, axis=-1, keepdims=False)
+    scale = amax / INT8_QMAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# params-tree calibration + conversion
+# ---------------------------------------------------------------------------
+
+def _eligible(path, leaf) -> bool:
+    if isinstance(leaf, QTensor) or not hasattr(leaf, "ndim"):
+        return False
+    if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    key = None
+    for p in reversed(path):
+        name = getattr(p, "key", getattr(p, "name", None))
+        if name is not None:
+            key = name
+            break
+    return key in QUANT_KEYS
+
+
+def calibrate_absmax(params, *, eligible: Callable = _eligible):
+    """One-pass absmax calibration over a params tree: returns a tree of the
+    same structure whose eligible leaves hold the per-channel absmax
+    (reduced over the contraction axis) and whose other leaves are None.
+    ``quantize_params`` consumes these stats; they are also the artifact a
+    later activation-aware calibrator would refine."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _absmax(leaf, axis=-2)
+        if eligible(path, leaf) else None, params)
+
+
+def quantize_params(params, mode: str, *, group: int = DEFAULT_GROUP,
+                    eligible: Callable = _eligible):
+    """Quantize every eligible weight leaf of a params tree.
+
+    Returns (new_params, report) where report counts converted leaves and
+    the byte saving.  mode: 'int8' | 'int4'.  int4 leaves whose contraction
+    dim the group can't tile stay dense (counted in report['skipped']).
+    """
+    stats = {"quantized": 0, "skipped": 0, "bytes_before": 0, "bytes_after": 0}
+
+    def conv(path, leaf):
+        if not eligible(path, leaf):
+            return leaf
+        stats["bytes_before"] += int(leaf.size * leaf.dtype.itemsize)
+        try:
+            qt = quantize(leaf, mode, group=group)
+        except ValueError:
+            stats["skipped"] += 1
+            stats["bytes_after"] += int(leaf.size * leaf.dtype.itemsize)
+            return leaf
+        stats["quantized"] += 1
+        stats["bytes_after"] += qt.nbytes
+        return qt
+
+    out = jax.tree_util.tree_map_with_path(conv, params)
+    return out, stats
+
+
+def tree_nbytes(tree) -> int:
+    """Total payload bytes of a (possibly quantized) pytree."""
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))

@@ -22,7 +22,12 @@ from repro.core.coarsening import CoarseningConfig
 # v2: the flash_attention family moved to a (b, h, hkv, sq, sk, d) spec
 # shape and a dedicated attention cost model (core/analysis), and gained the
 # flash_attention_bwd sibling — v1 flash winners are stale.
-CACHE_VERSION = 2
+# v3: repro.quant — matmul/moe_ffn specs grew wbits/group params and
+# decode_attention kv_bits, with packed-byte + dequant terms in the cost
+# models; the ops audit also started keying every family on the REAL array
+# dtype (ew/gather/stencil/scan/embed previously all filed under "float32"),
+# so v2 winners for those families sit under wrong keys.
+CACHE_VERSION = 3
 ENV_VAR = "REPRO_TUNE_CACHE"
 
 

@@ -260,7 +260,8 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
         m, n, k = spec.shape
         return analysis.matmul_cost(
             m, n, k, cfg, bm=p.get("bm", 128), bn=p.get("bn", 128),
-            bk=p.get("bk", 256), dtype_bytes=dtb).modeled_s
+            bk=p.get("bk", 256), dtype_bytes=dtb,
+            wbits=p.get("wbits"), group=p.get("group") or 32).modeled_s
 
     if fam == "dp_scan":
         rows, cols = spec.shape
@@ -295,12 +296,14 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
         b, h, hkv, s, d = spec.shape
         return analysis.decode_attention_cost(
             b, h, hkv, s, d, cfg, bkv=p.get("bkv", 128),
-            kv_len=p.get("kv_len", None), dtype_bytes=dtb).modeled_s
+            kv_len=p.get("kv_len", None), dtype_bytes=dtb,
+            kv_bits=p.get("kv_bits")).modeled_s
 
     if fam == "moe_ffn":
         e, cap, d, f = spec.shape
-        return analysis.moe_ffn_cost(e, cap, d, f, cfg,
-                                     dtype_bytes=dtb).modeled_s
+        return analysis.moe_ffn_cost(e, cap, d, f, cfg, dtype_bytes=dtb,
+                                     wbits=p.get("wbits"),
+                                     group=p.get("group") or 32).modeled_s
 
     if fam == "ssd":
         b, h, g, s, pp, nn = spec.shape

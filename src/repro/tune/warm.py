@@ -83,6 +83,22 @@ def warm_for_model(cfg, *, seq: int, batch: int,
             dtype="bfloat16", bq=min(128, seq), bkv=min(128, seq),
             causal=True),
     }
+    wbits = {"int8": 8, "int4": 4}.get(getattr(cfg, "quant", "none"))
+    if wbits:
+        # the dequant-fused quantized matmul: same geometry as the dense
+        # spec but its own cache key (wbits/group) — the packed-pane byte
+        # and dequant terms can move the winning degree
+        specs["matmul_q"] = KernelSpec.make(
+            "matmul", (_round_down(toks, 128 * 8),
+                       _round_down(cfg.d_ff, 128),
+                       _round_down(d, 256)),
+            dtype="bfloat16", bm=128, bn=128, bk=256, wbits=wbits,
+            group=cfg.quant_group if wbits == 4 else 0)
+    if getattr(cfg, "kv_quant", "none") == "int8":
+        specs["decode_attention_q"] = KernelSpec.make(
+            "decode_attention",
+            (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
+            dtype="int8", bkv=min(128, seq), window=0, kv_bits=8)
     if cfg.n_experts:
         # grouped-expert fused FFN over the padded dispatch buffer, at the
         # exact capacity the layer dispatches
@@ -91,6 +107,11 @@ def warm_for_model(cfg, *, seq: int, batch: int,
         specs["moe_ffn"] = KernelSpec.make(
             "moe_ffn", (cfg.n_experts_padded, cap, d, cfg.moe_d_ff),
             dtype="bfloat16")
+        if wbits:
+            specs["moe_ffn_q"] = KernelSpec.make(
+                "moe_ffn", (cfg.n_experts_padded, cap, d, cfg.moe_d_ff),
+                dtype="bfloat16", wbits=wbits,
+                group=cfg.quant_group if wbits == 4 else 0)
         # the decode step dispatches at its own (much smaller) capacity:
         # blocks.attn_block_decode passes max(4, min(B, 4*top_k)) and
         # layers.moe clamps it to the step's B tokens — a distinct spec
@@ -125,8 +146,13 @@ def warm_for_model(cfg, *, seq: int, batch: int,
 def wall_measurer(reps: int = 3):
     """measure(spec, cfg) -> seconds by timing the jit'd op on this host.
 
-    Supports the families the benchmark suite measures; interpret-mode wall
-    time on CPU, Mosaic wall time on TPU (same call path).
+    Supports the families the benchmark suite measures (including the
+    quantized matmul/moe_ffn and int8-KV decode specs).  The ops layer
+    builds kernels with ``interpret=(default backend == cpu)``, so on a TPU
+    host this times the COMPILED (Mosaic-lowered) kernel and the cache
+    entry's ``source='measured'`` provenance refers to real silicon;
+    interpret-mode timing is the CPU fallback (ROADMAP "measured-timing
+    tuning" item).
     """
     import jax
     import jax.numpy as jnp
@@ -159,8 +185,18 @@ def wall_measurer(reps: int = 3):
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
             a = jax.random.normal(key, (m, k), dt)
             b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dt)
-            fn = lambda: ops.matmul(a, b, cfg, bm=p.get("bm", 128),
-                                    bn=p.get("bn", 128), bk=p.get("bk", 256))
+            if p.get("wbits"):
+                from repro.quant import quantize
+                qw = quantize(b.astype(jnp.float32),
+                              "int8" if p["wbits"] == 8 else "int4",
+                              group=p.get("group") or 32)
+                fn = lambda: ops.quant_matmul(a, qw, cfg, bm=p.get("bm", 128),
+                                              bn=p.get("bn", 128),
+                                              bk=p.get("bk", 256))
+            else:
+                fn = lambda: ops.matmul(a, b, cfg, bm=p.get("bm", 128),
+                                        bn=p.get("bn", 128),
+                                        bk=p.get("bk", 256))
         elif spec.family == "dp_scan":
             rows, cols = spec.shape
             c = jax.random.uniform(key, (rows, cols))
@@ -180,9 +216,18 @@ def wall_measurer(reps: int = 3):
                                    (b, s, hkv, d), dt)
             pos = jnp.full((b,), s - 1, jnp.int32)
             w = p.get("window", 0) or None
-            fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
-                                              bkv=p.get("bkv", 128),
-                                              window=w)
+            if p.get("kv_bits"):
+                from repro.quant import quantize_kv
+                kq, ks = quantize_kv(kc.astype(jnp.float32))
+                vq, vs = quantize_kv(vc.astype(jnp.float32))
+                fn = lambda: ops.decode_attention(q, kq, vq, pos, cfg,
+                                                  bkv=p.get("bkv", 128),
+                                                  window=w, k_scale=ks,
+                                                  v_scale=vs)
+            else:
+                fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
+                                                  bkv=p.get("bkv", 128),
+                                                  window=w)
         elif spec.family in ("flash_attention", "flash_attention_bwd"):
             b, h, hkv, sq, sk, d = spec.shape
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
@@ -215,7 +260,15 @@ def wall_measurer(reps: int = 3):
             w3 = jax.random.normal(jax.random.fold_in(key, 2), (e, d, f), dt)
             w2 = jax.random.normal(jax.random.fold_in(key, 3), (e, f, d), dt)
             wts = jax.random.uniform(jax.random.fold_in(key, 4), (e, cap))
-            fn = lambda: ops.moe_ffn(xe, w1, w3, w2, wts, cfg)
+            if p.get("wbits"):
+                from repro.quant import quantize
+                mode = "int8" if p["wbits"] == 8 else "int4"
+                g = p.get("group") or 32
+                q1, q3, q2 = (quantize(w.astype(jnp.float32), mode, group=g)
+                              for w in (w1, w3, w2))
+                fn = lambda: ops.quant_moe_ffn(xe, q1, q3, q2, wts, cfg)
+            else:
+                fn = lambda: ops.moe_ffn(xe, w1, w3, w2, wts, cfg)
         elif spec.family == "embed_gather":
             n_ids, vocab, d = spec.shape
             ids = jax.random.randint(key, (n_ids,), 0, vocab)

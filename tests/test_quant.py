@@ -1,0 +1,444 @@
+"""repro.quant: pack/unpack round-trip properties (hypothesis), dequant-
+fused kernel parity vs the dense-dequant oracle across coarsening
+kinds/degrees (matmul, moe_ffn, int8-KV decode attention), the model-level
+dispatch with dense fallback, quant-aware tuner keys with DISTINCT winning
+degrees vs dense specs, and the end-to-end quantized serve path."""
+import dataclasses
+import importlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CoarseningConfig
+from repro.core.analysis import moe_ffn_cost
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import model as M
+from repro.quant import (QTensor, dequantize, dequantize_kv, pack_int4,
+                         quantize, quantize_int4, quantize_int8, quantize_kv,
+                         quantize_params, unpack_int4)
+from repro.tune import KernelSpec, TuningCache, autotune, search
+
+tune_search = importlib.import_module("repro.tune.search")
+
+KEY = jax.random.PRNGKey(7)
+SPECS = ("none", "con2", "con4", "gap2", "gap4")
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # container without dev extras
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# format round-trips
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _weights = st.integers(0, 2**31 - 1).map(
+        lambda s: np.asarray(
+            np.random.default_rng(s).standard_normal((64, 16))
+            * np.exp(np.random.default_rng(s + 1).uniform(-3, 3)),
+            np.float32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(w=_weights)
+    def test_int8_roundtrip_error_bounded(w):
+        """|w - dequant(quant(w))| <= scale/2 elementwise, exact shapes."""
+        qt = quantize_int8(jnp.asarray(w))
+        assert qt.q.shape == w.shape and qt.q.dtype == jnp.int8
+        assert qt.scale.shape == (1, w.shape[1])
+        err = np.abs(np.asarray(dequantize(qt)) - w)
+        bound = np.broadcast_to(np.asarray(qt.scale) / 2, w.shape)
+        assert (err <= bound + 1e-7).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(w=_weights, group=st.sampled_from([8, 16, 32]))
+    def test_int4_roundtrip_error_bounded(w, group):
+        qt = quantize_int4(jnp.asarray(w), group=group)
+        k, n = w.shape
+        assert qt.q.shape == (k // 2, n) and qt.q.dtype == jnp.uint8
+        assert qt.scale.shape == (k // group, n)
+        err = np.abs(np.asarray(dequantize(qt)) - w)
+        bound = np.repeat(np.asarray(qt.scale), group, axis=0) / 2
+        assert (err <= bound + 1e-7).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_int4_pack_unpack_exact(seed):
+        q = np.random.default_rng(seed).integers(-7, 8, size=(32, 8))
+        out = np.asarray(unpack_int4(pack_int4(jnp.asarray(q))))
+        np.testing.assert_array_equal(out, q.astype(np.float32))
+
+
+@pytest.mark.parametrize("mode,group", [("int8", 0), ("int4", 16),
+                                        ("int4", 32)])
+def test_roundtrip_deterministic(mode, group):
+    """Always-on (no-hypothesis) version of the round-trip bound."""
+    w = jax.random.normal(KEY, (64, 32)) * 3.0
+    qt = quantize(w, mode, group=group or 32)
+    assert qt.shape == w.shape
+    err = np.abs(np.asarray(dequantize(qt)) - np.asarray(w))
+    if mode == "int8":
+        bound = np.broadcast_to(np.asarray(qt.scale) / 2, w.shape)
+    else:
+        bound = np.repeat(np.asarray(qt.scale), qt.group, axis=0) / 2
+    assert (err <= bound + 1e-7).all()
+
+
+def test_kv_roundtrip_and_shapes():
+    x = jax.random.normal(KEY, (2, 9, 3, 16)) * 5.0
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 9, 3)
+    err = np.abs(np.asarray(dequantize_kv(q, s)) - np.asarray(x))
+    assert (err <= np.asarray(s)[..., None] / 2 + 1e-7).all()
+
+
+def test_int4_rejects_untileable_group():
+    with pytest.raises(ValueError):
+        quantize_int4(jax.random.normal(KEY, (48, 8)), group=32)
+    with pytest.raises(ValueError):
+        quantize_int4(jax.random.normal(KEY, (32, 8)), group=5)
+
+
+def test_qtensor_is_pytree():
+    qt = quantize_int8(jax.random.normal(KEY, (16, 8)))
+    mapped = jax.tree.map(lambda a: a, qt)
+    assert isinstance(mapped, QTensor) and mapped.bits == 8
+    leaves = jax.tree.leaves(qt)
+    assert {l.dtype for l in leaves} == {jnp.dtype(jnp.int8),
+                                        jnp.dtype(jnp.float32)}
+
+
+def test_quantize_params_walks_only_eligible_leaves():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(KEY, cfg)
+    qp, rep = quantize_params(params, "int8")
+    assert rep["quantized"] > 0 and rep["bytes_after"] < rep["bytes_before"]
+    # embeddings / head / norms stay dense
+    assert not isinstance(qp["embed"], QTensor)
+    if "lm_head" in qp:
+        assert not isinstance(qp["lm_head"], QTensor)
+    blk = qp["blocks"][0]
+    assert isinstance(blk["attn"]["wq"], QTensor)
+    assert isinstance(blk["ffn"]["w1"], QTensor)
+    assert not isinstance(blk["ln1"]["scale"], QTensor)
+
+
+# ---------------------------------------------------------------------------
+# dequant-fused kernel parity vs the dense-dequant oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_quant_matmul_matches_dequant_oracle(mode, spec):
+    m, n, k = 256, 256, 256
+    a = jax.random.normal(KEY, (m, k)) * 0.3
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n)) * 0.3
+    qt = quantize(b, mode)
+    want = ref.matmul(a, dequantize(qt))
+    got = ops.quant_matmul(a, qt, CoarseningConfig.parse(spec),
+                           bm=64, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("spec", SPECS + ("con8", "gap8"))
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_quant_moe_ffn_matches_dequant_oracle(mode, spec):
+    e, cap, d, f = 8, 4, 64, 64
+    xe = jax.random.normal(KEY, (e, cap, d)) * 0.5
+    w1 = jax.random.normal(jax.random.fold_in(KEY, 1), (e, d, f)) / 8
+    w3 = jax.random.normal(jax.random.fold_in(KEY, 2), (e, d, f)) / 8
+    w2 = jax.random.normal(jax.random.fold_in(KEY, 3), (e, f, d)) / 8
+    wts = jax.random.uniform(jax.random.fold_in(KEY, 4), (e, cap))
+    q1, q3, q2 = (quantize(w, mode) for w in (w1, w3, w2))
+    want = ref.moe_ffn(xe, dequantize(q1), dequantize(q3), dequantize(q2),
+                       wts)
+    got = ops.quant_moe_ffn(xe, q1, q3, q2, wts,
+                            CoarseningConfig.parse(spec))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_decode_int8_kv_matches_dequant_oracle(spec):
+    b, h, hkv, s, d = 2, 4, 2, 256, 32
+    q = jax.random.normal(KEY, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    pos = jnp.asarray([100, 255], jnp.int32)
+    kq, ks = quantize_kv(kc)
+    vq, vs = quantize_kv(vc)
+    want = ref.decode_attention(q, dequantize_kv(kq, ks),
+                                dequantize_kv(vq, vs), pos)
+    got = ops.decode_attention(q, kq, vq, pos, CoarseningConfig.parse(spec),
+                               bkv=64, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # and the quantized path is CLOSE to full-precision attention
+    full = ref.decode_attention(q, kc, vc, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=0.1, atol=0.05)
+
+
+def test_quant_matmul_int4_rejects_bad_group_tiling():
+    from repro.kernels import matmul as KM
+    with pytest.raises(ValueError):
+        KM.make_qkernel(128, 128, 256, CoarseningConfig(), bits=4,
+                        group=48, bk=128)
+
+
+# ---------------------------------------------------------------------------
+# model-level dispatch: quantized ffn/moe with kernel + dense fallback
+# ---------------------------------------------------------------------------
+
+def test_ffn_quantized_kernel_and_fallback(scratch_default_cache):
+    pf = L.ffn_init(KEY, 256, 512)
+    x = jax.random.normal(jax.random.fold_in(KEY, 6), (128, 256)) * 0.1
+    qf, _ = quantize_params({"w1": pf["w1"], "w3": pf["w3"],
+                             "w2": pf["w2"]}, "int8")
+    dense = L.ffn({k: dequantize(v) for k, v in qf.items()}, x)
+    # pallas: tileable geometry -> the dequant-fused kernel
+    got_k = L.ffn(qf, x, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    # ref backend -> dense-dequant fallback, numerically the oracle
+    got_f = L.ffn(qf, x)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    # untileable geometry under pallas -> fallback, not an error
+    pf2 = L.ffn_init(jax.random.fold_in(KEY, 9), 96, 80)
+    qf2, _ = quantize_params(pf2, "int8")
+    x2 = jax.random.normal(jax.random.fold_in(KEY, 10), (5, 96))
+    got2 = L.ffn(qf2, x2, backend="pallas")
+    want2 = L.ffn({k: dequantize(v) for k, v in qf2.items()}, x2)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4"])
+def test_moe_quantized_backend_close_to_dense(mode, scratch_default_cache):
+    """moe() with QTensor expert weights: the pallas fused-dequant path and
+    the einsum fallback must agree with each other exactly, and stay close
+    to the unquantized layer."""
+    cfg = get_config("olmoe-1b-7b").reduced()
+    p = L.moe_init(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (2, 16, cfg.d_model))
+    want, _ = L.moe(p, x, cfg, capacity=32)
+    qp, rep = quantize_params(p, mode)
+    assert isinstance(qp["w1"], QTensor)
+    got_ref, _ = L.moe(qp, x, cfg, capacity=32)
+    got_pal, _ = L.moe(qp, x, dataclasses.replace(cfg, moe_backend="pallas"),
+                       capacity=32)
+    np.testing.assert_allclose(np.asarray(got_pal), np.asarray(got_ref),
+                               rtol=1e-4, atol=1e-4)
+    tol = 0.05 if mode == "int8" else 0.3
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_attention_layer_quant_fallback_matches_kernel(
+        scratch_default_cache):
+    b, h, hkv, s, d = 2, 4, 2, 128, 32
+    q = jax.random.normal(KEY, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    pos = jnp.asarray([50, 127], jnp.int32)
+    kq, ks = quantize_kv(kc)
+    vq, vs = quantize_kv(vc)
+    ref_o = L.decode_attention(q, kq, vq, pos, k_scale=ks, v_scale=vs)
+    pal_o = L.decode_attention(q, kq, vq, pos, k_scale=ks, v_scale=vs,
+                               backend="pallas", bkv=64)
+    np.testing.assert_allclose(np.asarray(pal_o), np.asarray(ref_o),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tuner: quant-aware keys and DISTINCT winners
+# ---------------------------------------------------------------------------
+
+def test_resolve_cfg_keys_on_real_dtype(scratch_default_cache):
+    """The dtype-audit satellite: every op now hands resolve_cfg the REAL
+    array dtype, so bf16 and f32 instances of one geometry occupy different
+    cache keys (and quantized ones a third) instead of colliding on the old
+    'float32' default."""
+    n = 1 << 14
+    for dt in ("float32", "bfloat16"):
+        ops.resolve_cfg("auto", "ew_stream", (n,), dtype=dt, n_loads=2,
+                        ai=4, variant="base", block=512)
+    ops.resolve_cfg("auto", "matmul", (512, 256, 512), dtype="bfloat16",
+                    bm=128, bn=128, bk=256, wbits=8, group=0)
+    blob = json.load(open(scratch_default_cache))
+    assert len(blob["entries"]) == 3
+    dts = {k.split("|")[2] for k in blob["entries"]}
+    assert {"float32", "bfloat16"} <= dts
+    assert any("wbits=8" in k for k in blob["entries"])
+    # and the op-level call sites really pass the array dtype through
+    x = jax.random.normal(KEY, (1 << 14,))
+    ops.ew_stream((x, x), "auto", ai=4, block=512)
+    spec = KernelSpec.make("ew_stream", (1 << 14,), dtype="float32",
+                           n_loads=2, ai=4, variant="base", block=512)
+    blob = json.load(open(scratch_default_cache))
+    assert spec.key in blob["entries"]
+
+
+def test_quant_spec_distinct_cache_key_and_winner(tmp_path):
+    """The acceptance bar: at the same geometry the tuner picks DIFFERENT
+    winning degrees for the quantized spec than for the dense one, because
+    packed panes + dequant move the memory/compute crossover."""
+    cache = TuningCache(str(tmp_path / "tune.json"))
+    shape = (64, 128, 2048, 1024)
+    dense = KernelSpec.make("moe_ffn", shape, dtype="bfloat16")
+    q8 = KernelSpec.make("moe_ffn", shape, dtype="bfloat16", wbits=8,
+                         group=0)
+    q4 = KernelSpec.make("moe_ffn", shape, dtype="bfloat16", wbits=4,
+                         group=32)
+    assert len({dense.key, q8.key, q4.key}) == 3
+    wins = {s.key: autotune(s, cache=cache) for s in (dense, q8, q4)}
+    assert len(cache.entries) == 3
+    assert wins[q8.key] != wins[dense.key] or wins[q4.key] != wins[dense.key]
+    # the modeled quantized time beats dense at its own winner
+    q8c = moe_ffn_cost(*shape, wins[q8.key], wbits=8)
+    dc = moe_ffn_cost(*shape, wins[dense.key])
+    assert q8c.modeled_s < dc.modeled_s
+
+
+def test_ops_quant_auto_dispatch(scratch_default_cache):
+    """cfg='auto' on quant_moe_ffn persists under the wbits-tagged key and
+    the second call never re-searches."""
+    e, cap, d, f = 8, 4, 64, 64
+    xe = jax.random.normal(KEY, (e, cap, d)) * 0.5
+    ws = [jax.random.normal(jax.random.fold_in(KEY, i), shp) / 8
+          for i, shp in enumerate([(e, d, f), (e, d, f), (e, f, d)])]
+    wts = jax.random.uniform(jax.random.fold_in(KEY, 4), (e, cap))
+    q1, q3, q2 = (quantize(w, "int8") for w in ws)
+    before = tune_search.SEARCH_COUNT
+    ops.quant_moe_ffn(xe, q1, q3, q2, wts, "auto")
+    assert tune_search.SEARCH_COUNT == before + 1
+    spec = KernelSpec.make("moe_ffn", (e, cap, d, f), dtype="float32",
+                           wbits=8, group=0)
+    blob = json.load(open(scratch_default_cache))
+    assert spec.key in blob["entries"]
+    ops.quant_moe_ffn(xe, q1, q3, q2, wts, "auto")
+    assert tune_search.SEARCH_COUNT == before + 1
+
+
+def test_warm_covers_quant_families(tmp_path):
+    from repro.tune import warm_for_model
+    cfg = dataclasses.replace(get_config("olmoe-1b-7b"), quant="int8",
+                              kv_quant="int8")
+    cache = TuningCache(str(tmp_path / "warm.json"))
+    out = warm_for_model(cfg, seq=128, batch=8, cache=cache, verbose=False)
+    assert {"matmul_q", "moe_ffn_q", "decode_attention_q"} <= set(out)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: quantized prefill + decode vs the f32 path
+# ---------------------------------------------------------------------------
+
+def _decode_logits(cfg, params, toks, n_steps=3, s_max=64):
+    logits, cache = M.lm_prefill(params, {"tokens": toks}, cfg, s_max=s_max)
+    b = toks.shape[0]
+    pos = jnp.full((b,), toks.shape[1], jnp.int32)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [logits]
+    for _ in range(n_steps):
+        lg, cache = M.lm_decode_step(params, cache, tok, pos, cfg)
+        out.append(lg)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+    return out
+
+
+def test_quantized_decode_logits_close_to_f32(scratch_default_cache):
+    """The acceptance bar: --quant int8 --kv-quant int8 end-to-end decode
+    logits stay within the documented tolerance of the f32 path (README
+    Quantization: ~0.05 max logit delta at reduced scale)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(KEY, cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 12), 1,
+                              cfg.vocab)
+    base = _decode_logits(cfg, params, toks)
+    qcfg = dataclasses.replace(cfg, quant="int8", kv_quant="int8",
+                               decode_backend="pallas", decode_bkv=16)
+    qparams, rep = quantize_params(params, "int8")
+    assert rep["quantized"] > 0
+    qlog = _decode_logits(qcfg, qparams, toks)
+    for a, b in zip(base, qlog):
+        d = float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        assert d < 0.05, d
+        # greedy decode must agree at this scale
+        np.testing.assert_array_equal(np.asarray(jnp.argmax(a, -1)),
+                                      np.asarray(jnp.argmax(b, -1)))
+
+
+def test_prefill_decode_compose_with_int8_kv(scratch_default_cache):
+    """Chunked prefill then decode on a quantized cache must equal one-shot
+    prefill: quantize-on-append is position-wise, so chunking can't change
+    the stored payloads."""
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduced(),
+                              kv_quant="int8")
+    params = M.lm_init(KEY, cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 16), 1,
+                              cfg.vocab)
+    one, cache_one = M.lm_prefill(params, {"tokens": toks}, cfg, s_max=64)
+    cache = M.lm_init_cache(cfg, 2, 64)
+    assert cache["blocks"][0]["k"].dtype == jnp.int8
+    for i in range(0, 16, 8):
+        pos0 = jnp.full((2,), i, jnp.int32)
+        chunked, cache = M.lm_prefill(params, {"tokens": toks[:, i:i + 8]},
+                                      cfg, cache=cache, pos0=pos0)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(one),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_array_equal(
+        np.asarray(cache["blocks"][0]["k"]),
+        np.asarray(cache_one["blocks"][0]["k"]))
+
+
+def test_encdec_quantized_prefill_close_to_f32(scratch_default_cache):
+    """Enc-dec models serve quantized too: the stacked xattn wk/wv leaves
+    become QTensors and the cross-K/V precompute paths must dequantize them
+    (regression: they used raw .astype and crashed)."""
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    assert cfg.is_encdec
+    params = M.lm_init(KEY, cfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 8), 1,
+                              cfg.vocab)
+    frames = jax.random.normal(jax.random.fold_in(KEY, 4),
+                               (2, 16, cfg.d_model)) * 0.1
+    batch = {"tokens": toks, "src_frames": frames}
+    want, _ = M.lm_prefill(params, batch, cfg, s_max=32)
+    qparams, rep = quantize_params(params, "int8")
+    assert rep["quantized"] > 0
+    got, _ = M.lm_prefill(qparams, batch, cfg, s_max=32)
+    assert float(np.abs(np.asarray(got) - np.asarray(want)).max()) < 0.25
+    # the xkv_precompute training-path branch dequantizes too
+    h_want, _ = M.lm_apply(params, batch, cfg, xkv_precompute=True)
+    h_got, _ = M.lm_apply(qparams, batch, cfg, xkv_precompute=True)
+    assert float(np.abs(np.asarray(h_got, np.float32)
+                        - np.asarray(h_want, np.float32)).max()) < 0.25
+
+
+def test_batched_server_quant_smoke(scratch_default_cache):
+    """BatchedServer end-to-end with --quant int8 --kv-quant int8: runs to
+    completion and reports the memory saving."""
+    from repro.launch.serve import BatchedServer
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(KEY, cfg)
+    srv = BatchedServer(cfg, params, slots=2, max_len=32, chunk=8,
+                        decode_block=4, quant="int8", kv_quant="int8")
+    assert srv.try_admit(list(range(1, 9)), 4)
+    while srv.any_active:
+        srv.step()
+    assert len(srv.completed) == 1 and len(srv.completed[0]) >= 4
+    assert srv.weight_mib < srv.weight_mib_dense
+    assert srv.cache_mib < srv.cache_mib_dense
+    assert srv.quant_report["quantized"] > 0
