@@ -19,6 +19,9 @@ Tables (one per paper figure):
   quant  — dense bf16 vs dequant-fused int8/int4 weight kernels and the
            int8-KV decode path, fixed degrees vs AUTO (quantized specs can
            pick different winning degrees than dense ones)
+  paging — paged-KV serving: admitted tokens at a fixed HBM budget vs the
+           contiguous per-slot cache (heterogeneous trace), block-table
+           paged decode kernel cost, end-to-end scheduler tok/s
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -33,7 +36,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
-                        roofline, tuned, decode, moe, attention, quant)
+                        roofline, tuned, decode, moe, attention, quant,
+                        paging)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -49,6 +53,7 @@ TABLES = {
     "moe": moe.main,
     "attention": attention.main,
     "quant": quant.main,
+    "paging": paging.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

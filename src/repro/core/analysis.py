@@ -403,6 +403,7 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
                           cfg: CoarseningConfig, *, bkv: int = 128,
                           kv_len: int | None = None, dtype_bytes: int = 2,
                           kv_bits: int | None = None,
+                          page_size: int | None = None,
                           dense: bool = False) -> KernelCost:
     """Split-KV decode attention (one query token vs a (S, Hkv, D) cache).
 
@@ -412,6 +413,13 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     reduces them to a partial (m, l, acc) that a cheap combine pass merges.
     The grid is length-aware: only blocks covering the live prefix
     ``kv_len`` are walked, not the allocated ``s``.
+
+    ``page_size`` models the BLOCK-TABLE paged variant (bkv == page_size):
+    physical contiguity across pages is gone, so consecutive coarsening
+    degenerates to the gapped access pattern — C table-resolved page
+    descriptors per operand regardless of kind — plus a per-page table
+    lookup charged as extra issue latency.  Coarsening still amortizes the
+    per-descriptor overhead, which is exactly the paper's gapped story.
 
     dense=True models the unfused XLA einsum baseline at the SAME tiling
     granularity (XLA streams the cache in MXU-sized panes too): it scans
@@ -427,7 +435,10 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     n_splits = max(1, kv // (c * bkv))
     grid = b * hkv * n_splits
 
-    descs = c if (not dense and cfg.kind == KIND_GAPPED) else 1
+    # paged: physical pages are scattered, so BOTH kinds issue C page
+    # descriptors per operand (the table lookup killed wide contiguity)
+    descs = c if (not dense and (page_size is not None
+                                 or cfg.kind == KIND_GAPPED)) else 1
     # kv_bits=8 (int8 KV cache): the cache panes — decode's dominant
     # traffic — move at 1 byte/element plus a 4-byte scale per (row, head);
     # the fused dequant is extra VPU work per pane.
@@ -435,6 +446,10 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     bytes_per_desc = c * bkv * (d * kvb + (4.0 if kv_bits and not dense
                                            else 0.0)) / descs
     dma_s = 2 * _dma_time(bytes_per_desc, descs)          # K + V panes
+    if page_size is not None and not dense:
+        # per-page logical->physical resolution before each descriptor can
+        # issue: one dependent SMEM/HBM-latency hop per page
+        dma_s += descs * HBM_LATENCY_S
     flops = 4.0 * g * c * bkv * d + 6.0 * g * c * bkv     # qk + pv + softmax
     if kv_bits and not dense:
         flops += 2 * c * bkv * d * DEQUANT_OPS[kv_bits]   # K and V panes

@@ -203,3 +203,175 @@ def make_kernel(b: int, h: int, hkv: int, s: int, d: int,
             return out.reshape(b, 1, h, d).astype(q.dtype)
 
     return run
+
+
+def make_paged_kernel(b: int, h: int, hkv: int, n_pages: int, npp: int,
+                      d: int, cfg: CoarseningConfig, *, page_size: int = 64,
+                      window: int | None = None, scale: float | None = None,
+                      kv_bits: int | None = None,
+                      interpret: bool = True) -> Callable:
+    """Split-KV decode attention through a per-slot BLOCK TABLE.
+
+    The caches arrive as a global page pool shared by every slot —
+    k/v: (P, page_size, Hkv, D) — and each slot's logical cache row ``r``
+    lives at pool row ``(block_table[slot, r // page_size], r % page_size)``.
+    The kv block IS the page (bkv == page_size), so the coarsening axis is
+    the LOGICAL-PAGE axis of the slot: each program owns C logical pages,
+
+      consecutive : C adjacent logical pages
+      gapped      : C logical pages strided npp/C apart
+
+    and in BOTH cases the physical fetch is C table-resolved page loads —
+    paging is the paper's *gapped* access pattern with the fixed stride
+    replaced by the block-table indirection (C narrow cached LSUs,
+    Fig. 4 bottom); coarsening amortizes the per-page issue + table-lookup
+    overhead exactly as it amortizes the strided DMA issue overhead.
+
+    Logical pages past a slot's allocation sit at NULL_PAGE in the table;
+    their rows are beyond ``pos`` and the causal mask (which also covers
+    partially-filled tail pages) zeroes them out of the softmax.
+
+    Returned callable:
+      run(q (B,1,H,D), k_pool, v_pool (P,ps,Hkv,D), block_table (B,npp)
+          int32, pos (B,) int32) -> (B,1,H,D)
+    ``kv_bits=8``: pools are int8 with (P,ps,Hkv) f32 scale pools and the
+    callable takes (q, k_pool, v_pool, k_scale, v_scale, block_table, pos);
+    dequant is fused into the same VMEM pass as the contiguous kernel.
+    """
+    c = cfg.degree
+    ps = page_size
+    if npp % c:
+        raise ValueError(f"slot pages {npp} not tileable by degree {c}")
+    gapped = cfg.kind == KIND_GAPPED
+    g = h // hkv
+    if g * hkv != h:
+        raise ValueError(f"n_heads {h} not divisible by n_kv_heads {hkv}")
+    n_splits = npp // c
+    seg = npp // c                       # gapped logical-page stride
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kv_bits not in (None, 8):
+        raise ValueError(f"kv_bits must be None or 8, got {kv_bits}")
+    quant = kv_bits == 8
+
+    def logical_page(si, j):
+        return (j * seg + si) if gapped else (si * c + j)
+
+    def body(pos_ref, bt_ref, q_ref, k_ref, v_ref, *refs):
+        if quant:
+            ks_ref, vs_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            m_ref, l_ref, acc_ref = refs
+        si = pl.program_id(2)
+        pos = pos_ref[0, 0]
+
+        # fused logical-row extent for the length-aware skip (page indices
+        # are logical, so the extent math matches the contiguous kernel's)
+        if gapped:
+            first_row = si * ps
+            last_row = ((c - 1) * seg + si) * ps + ps - 1
+        else:
+            first_row = si * c * ps
+            last_row = (si * c + c - 1) * ps + ps - 1
+        live = first_row <= pos
+        if window is not None:
+            live &= last_row > pos - window
+
+        @pl.when(live)
+        def _compute():
+            q = q_ref[...].reshape(g, d).astype(jnp.float32)
+            m = jnp.full((g,), NEG, jnp.float32)
+            l = jnp.zeros((g,), jnp.float32)
+            acc = jnp.zeros((g, d), jnp.float32)
+            cols0 = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+            for j in range(c):       # unrolled: C table-resolved page loads
+                lp = logical_page(si, j)
+                pp = bt_ref[0, lp]   # physical page (the table gather)
+                kj = pl.load(k_ref, (pl.dslice(pp, 1), slice(None),
+                                     slice(None), slice(None))
+                             ).reshape(ps, d).astype(jnp.float32)
+                vj = pl.load(v_ref, (pl.dslice(pp, 1), slice(None),
+                                     slice(None), slice(None))
+                             ).reshape(ps, d).astype(jnp.float32)
+                if quant:
+                    kj = kj * pl.load(
+                        ks_ref, (pl.dslice(pp, 1), slice(None), slice(None))
+                    ).reshape(ps, 1)
+                    vj = vj * pl.load(
+                        vs_ref, (pl.dslice(pp, 1), slice(None), slice(None))
+                    ).reshape(ps, 1)
+                cols = cols0 + lp * ps
+                mask = cols <= pos
+                if window is not None:
+                    mask &= cols > pos - window
+                sij = jnp.dot(q, kj.T,
+                              preferred_element_type=jnp.float32) * scale
+                sij = jnp.where(mask, sij, NEG)
+                m_new = jnp.maximum(m, sij.max(axis=1))
+                p = jnp.exp(sij - m_new[:, None]) * mask
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + p.sum(axis=1)
+                acc = acc * alpha[:, None] + jnp.dot(
+                    p, vj, preferred_element_type=jnp.float32)
+                m = m_new
+            m_ref[...] = m.reshape(m_ref.shape)
+            l_ref[...] = l.reshape(l_ref.shape)
+            acc_ref[...] = acc.reshape(acc_ref.shape)
+
+        @pl.when(jnp.logical_not(live))
+        def _dead():
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the pool rides in whole (its page axis is gathered in-body, so no
+    # BlockSpec offset can window it); the head axis is still windowed
+    pool_spec = pl.BlockSpec((n_pages, ps, 1, d),
+                             lambda bb, hh, si: (0, 0, hh, 0))
+    sc_pool_spec = pl.BlockSpec((n_pages, ps, 1),
+                                lambda bb, hh, si: (0, 0, hh))
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, hh, si: (bb, 0)),          # pos
+        pl.BlockSpec((1, npp), lambda bb, hh, si: (bb, 0)),        # table
+        pl.BlockSpec((1, 1, g, d), lambda bb, hh, si: (bb, hh, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    if quant:
+        in_specs += [sc_pool_spec, sc_pool_spec]
+
+    call = pl.pallas_call(
+        body,
+        grid=(b, hkv, n_splits),
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, g, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, g, 1, d),
+                         lambda bb, hh, si: (bb, hh, 0, si, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, n_splits, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )
+
+    if quant:
+        def run(q, k_pool, v_pool, k_scale, v_scale, block_table, pos):
+            qv = q.reshape(b, hkv, g, d)
+            pos2 = pos.reshape(b, 1).astype(jnp.int32)
+            bt = block_table.astype(jnp.int32)
+            m, l, acc = call(pos2, bt, qv, k_pool, v_pool, k_scale, v_scale)
+            out = _combine(m, l, acc)                 # (B, Hkv, G, D)
+            return out.reshape(b, 1, h, d).astype(q.dtype)
+    else:
+        def run(q, k_pool, v_pool, block_table, pos):
+            qv = q.reshape(b, hkv, g, d)
+            pos2 = pos.reshape(b, 1).astype(jnp.int32)
+            bt = block_table.astype(jnp.int32)
+            m, l, acc = call(pos2, bt, qv, k_pool, v_pool)
+            out = _combine(m, l, acc)                 # (B, Hkv, G, D)
+            return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    return run

@@ -324,6 +324,63 @@ def decode_attention(q, k_cache, v_cache, pos, cfg: CoarseningConfig | str = BAS
 
 
 @functools.lru_cache(maxsize=256)
+def _paged_decode_fn(b, h, hkv, n_pages, npp, d, cfg, page_size, window,
+                     scale, backend, kv_bits=None):
+    if backend == "ref":
+        def run(q, k_pool, v_pool, bt, pos):
+            # gather-to-contiguous oracle: resolve the block table on the
+            # host-visible (XLA) side, then dense full-length attention
+            k = k_pool[bt].reshape(b, npp * page_size, hkv, d)
+            v = v_pool[bt].reshape(b, npp * page_size, hkv, d)
+            return ref.decode_attention(q, k, v, pos, window=window,
+                                        scale=scale)
+        return jax.jit(run)
+    return jax.jit(_decode.make_paged_kernel(b, h, hkv, n_pages, npp, d, cfg,
+                                             page_size=page_size,
+                                             window=window, scale=scale,
+                                             kv_bits=kv_bits,
+                                             interpret=_interpret()))
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos,
+                           cfg: CoarseningConfig | str = BASE, *,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           backend: str = "pallas",
+                           k_scale=None, v_scale=None):
+    """Split-KV decode attention through a per-slot block table.
+
+    q: (B,1,H,D); pools: (P, page_size, Hkv, D) shared by all slots;
+    block_table: (B, npp) int32 logical->physical page map (NULL-padded);
+    pos: (B,) int32 -> (B,1,H,D).  The coarsening axis is the LOGICAL-PAGE
+    axis (each program owns cfg.degree pages, resolved through the table —
+    the gapped strided-pane DMA with the stride replaced by a lookup).
+
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) select the int8 pool mode
+    (kv_bits=8 joins the tuner key, as does the page size)."""
+    b, _, h, d = q.shape
+    n_pages, page_size, hkv, _ = k_pool.shape
+    npp = block_table.shape[1]
+    quant = k_scale is not None
+    params = dict(page_size=page_size, window=window or 0)
+    if quant:
+        params["kv_bits"] = 8
+    cfg = resolve_cfg(cfg, "decode_attention_paged", (b, h, hkv, npp, d),
+                      dtype=k_pool.dtype.name, backend=backend, **params)
+    if backend == "ref" and quant:
+        from repro.quant.qtypes import dequantize_kv
+        k_pool = dequantize_kv(k_pool, k_scale)
+        v_pool = dequantize_kv(v_pool, v_scale)
+        quant = False
+    fn = _paged_decode_fn(b, h, hkv, n_pages, npp, d, cfg, page_size,
+                          window, scale, backend,
+                          8 if quant and backend != "ref" else None)
+    if quant:
+        return fn(q, k_pool, v_pool, k_scale, v_scale, block_table, pos)
+    return fn(q, k_pool, v_pool, block_table, pos)
+
+
+@functools.lru_cache(maxsize=256)
 def _moe_ffn_fn(e, cap, d, f, cfg, backend):
     if backend == "ref":
         return jax.jit(ref.moe_ffn)

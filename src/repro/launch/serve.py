@@ -17,9 +17,19 @@ with per-(token, kv-head) scales, quantized on append — together they
 roughly double the slots*max_len a host can hold; the driver prints the
 weight/cache memory next to tok/s.
 
+``--cache paged`` swaps the fixed-stride per-slot cache for the paged KV
+cache (repro.serve): a global page pool + per-slot block tables, FCFS
+admission with preemption on pool exhaustion, and shared-prefix page
+refcounting.  The driver then runs as a streaming front-end — requests are
+submitted to the Scheduler, which admits/preempts/retires against the
+PagedEngine (examples/serve_batched.py is a client of the same API).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --slots 4 --requests 8 --prompt-len 32 --chunk 16 --gen-tokens 16 \
       --quant int8 --kv-quant int8
+
+  PYTHONPATH=src python -m repro.launch.serve --cache paged --num-pages 24 \
+      --page-size 16 --slots 4 --requests 8 --gen-tokens 16
 """
 from __future__ import annotations
 
@@ -145,13 +155,18 @@ class BatchedServer:
     # -- admission: chunked prefill -----------------------------------------
 
     def try_admit(self, prompt: list[int], gen_tokens: int) -> bool:
+        # the cache holds max_len-1 prompt rows + the decode row; an
+        # oversized prompt must be rejected loudly — silently truncating it
+        # changes what the model conditions on
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the max_len "
+                f"{self.max_len} cache (holds {self.max_len - 1} prompt "
+                f"rows); rejecting instead of truncating")
         free = [s for s in range(self.slots) if not self.active[s]]
         if not free:
             return False
         s = free[0]
-        # same cap as per-token ingestion hitting pos >= max_len-1: the cache
-        # holds max_len-1 prompt rows + the decode row; never scatter past it
-        prompt = prompt[: self.max_len - 1]
         t0 = time.perf_counter()
         self.cache = _slot_reset(self.cache, jnp.asarray(s, jnp.int32))
         mask = jnp.zeros((self.slots,), bool).at[s].set(True)
@@ -220,6 +235,43 @@ class BatchedServer:
         return bool(self.active.any())
 
 
+def _serve_paged(args, cfg, params, rng) -> None:
+    """Streaming front-end over the paged engine: submit the request trace
+    to the Scheduler and let it admit / preempt / retire against the pool."""
+    from repro.serve import PagedEngine, Scheduler
+
+    num_pages = args.num_pages if args.num_pages is not None else \
+        args.slots * -(-args.max_len // args.page_size) + 1
+    engine = PagedEngine(cfg, params, slots=args.slots, num_pages=num_pages,
+                         page_size=args.page_size, max_len=args.max_len,
+                         chunk=args.chunk, decode_block=args.decode_block,
+                         tune=args.tune, decode_backend=args.decode_backend,
+                         moe_backend=args.moe_backend, quant=args.quant,
+                         kv_quant=args.kv_quant)
+    sched = Scheduler(engine)
+    for _ in range(args.requests):
+        sched.submit(list(rng.integers(1, cfg.vocab, args.prompt_len)),
+                     args.gen_tokens)
+    t0 = time.perf_counter()
+    done = sched.run_until_done()
+    dt = time.perf_counter() - t0
+    npre = sum(r.preemptions for r in done)
+    total = args.requests * (args.prompt_len + args.gen_tokens)
+    print(f"served {len(done)} requests / {total} tokens (paged: "
+          f"{engine.pool.capacity} pages x {engine.page_size} tok) in "
+          f"{engine.prefill_steps} prefill + {engine.decode_steps} decode "
+          f"model steps, {npre} preemptions, {dt:.2f}s")
+    print(f"prefill: {engine.prefill_tokens} tok in {engine.prefill_s:.2f}s "
+          f"({engine.prefill_tokens / max(engine.prefill_s, 1e-9):.1f} tok/s)"
+          f" | decode: {engine.decoded_tokens} tok in {engine.decode_s:.2f}s "
+          f"({engine.decoded_tokens / max(engine.decode_s, 1e-9):.1f} tok/s)"
+          f" (CPU interpret-scale)")
+    print(f"memory: weights {engine.weight_mib:.2f} MiB | paged kv pool "
+          f"{engine.cache_mib:.2f} MiB "
+          f"({engine.pool.tokens_capacity} pooled tokens)")
+    print("sample output:", done[0].output[:8])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCHS)
@@ -252,12 +304,26 @@ def main():
     from repro.tune import TUNE_CHOICES
     ap.add_argument("--tune", default=None, choices=[None, *TUNE_CHOICES],
                     help="warm the coarsening tuning cache before serving")
+    ap.add_argument("--cache", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV cache layout: contiguous per-slot strides or "
+                         "the paged pool + block tables (repro.serve)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged cache: tokens per page (= the decode "
+                         "kernel's kv block)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged cache: pool pages incl. the null page "
+                         "(default: slots*max_len/page_size + 1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = M.lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    if args.cache == "paged":
+        _serve_paged(args, cfg, params, rng)
+        return
     server = BatchedServer(cfg, params, slots=args.slots,
                            max_len=args.max_len, chunk=args.chunk,
                            decode_block=args.decode_block, tune=args.tune,
@@ -265,7 +331,6 @@ def main():
                            moe_backend=args.moe_backend, quant=args.quant,
                            kv_quant=args.kv_quant)
 
-    rng = np.random.default_rng(0)
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))
                for _ in range(args.requests)]
     t0 = time.perf_counter()

@@ -173,6 +173,124 @@ def attn_cache_init(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16):
             "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), dtype)}
 
 
+# -- paged attention cache (repro.serve: global page pool + block tables) ----
+
+def attn_cache_init_paged(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+    """Paged decode K/V: one global (P, page_size, Hkv, hd) pool per layer,
+    shared by every slot through its block table.  Page 0 is the NULL page
+    (repro.serve.paging): never allocated, and the write paths route
+    inactive slots' scatters to it.  cfg.kv_quant="int8" composes — int8
+    payload pools + per-(row, kv-head) f32 scale pools, double the pages
+    per HBM byte."""
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_quant == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _paged_rows(block_table, pos, page_size):
+    """Physical (page, row) for logical cache rows ``pos``; pos may be (B,)
+    or (B,T).  Rows past a slot's allocation resolve to the NULL page."""
+    bidx = jnp.arange(block_table.shape[0])
+    if pos.ndim == 2:
+        bidx = bidx[:, None]
+    return block_table[bidx, pos // page_size], pos % page_size
+
+
+def attn_block_decode_paged(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
+                            block_table, shard: ShardCtx = NOSHARD):
+    """Paged twin of attn_block_decode: the new row scatters through the
+    block table into the shared pool and attention reads the pool through
+    the same table.  cache: {'k','v'[,'k_scale','v_scale']} pools
+    (P,ps,kv,hd); block_table: (B, npp) int32; pos: (B,)."""
+    window = cfg.window if kind == ATTN_LOCAL else None
+    ps = cache["k"].shape[1]
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos[:, None])
+    quant = "k_scale" in cache
+    k_upd, v_upd = jax.lax.optimization_barrier((k[:, 0], v[:, 0]))
+    page, row = _paged_rows(block_table, pos, ps)
+    kscale = vscale = None
+    if quant:
+        from repro.quant.qtypes import quantize_kv
+        k_upd, ks_new = quantize_kv(k_upd.astype(jnp.float32))
+        v_upd, vs_new = quantize_kv(v_upd.astype(jnp.float32))
+        kscale = cache["k_scale"].at[page, row].set(ks_new)
+        vscale = cache["v_scale"].at[page, row].set(vs_new)
+    kc = cache["k"].at[page, row].set(k_upd)
+    vc = cache["v"].at[page, row].set(v_upd)
+    o = L.paged_decode_attention(q, kc, vc, block_table, pos, window=window,
+                                 backend=cfg.decode_backend,
+                                 cfg=cfg.decode_attn_cfg,
+                                 k_scale=kscale, v_scale=vscale)
+    o = o.reshape(x.shape[0], 1, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = L.moe(p["moe"], h, cfg, shard=shard,
+                     capacity=max(4, min(x.shape[0], 4 * cfg.top_k)))
+    else:
+        y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
+    newc = {"k": kc, "v": vc}
+    if quant:
+        newc.update(k_scale=kscale, v_scale=vscale)
+    return x + y, newc
+
+
+def attn_block_prefill_paged(p, x, cfg: ModelConfig, cache, *, kind: str,
+                             pos0, block_table):
+    """Paged twin of attn_block_prefill: the chunk's rows scatter through
+    the block table; attention gathers the slot's logical view back out of
+    the pool (mea fallback, as in the contiguous prefill).  Write
+    protection for non-admitted slots comes from the table itself — the
+    engine nulls their rows, so their scatters land on the null page."""
+    b, t, _ = x.shape
+    ps = cache["k"].shape[1]
+    npp = block_table.shape[1]
+    window = cfg.window if kind == ATTN_LOCAL else None
+    pos = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None]     # (B,T)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    page, row = _paged_rows(block_table, pos, ps)
+    quant = "k_scale" in cache
+    newc = {}
+    if quant:
+        from repro.quant.qtypes import quantize_kv
+        kq, ks_new = quantize_kv(k.astype(jnp.float32))
+        vq, vs_new = quantize_kv(v.astype(jnp.float32))
+        k_upd, v_upd = jax.lax.optimization_barrier((kq, vq))
+        newc["k_scale"] = cache["k_scale"].at[page, row].set(ks_new)
+        newc["v_scale"] = cache["v_scale"].at[page, row].set(vs_new)
+    else:
+        k_upd, v_upd = jax.lax.optimization_barrier(
+            (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
+    kc = cache["k"].at[page, row].set(k_upd)
+    vc = cache["v"].at[page, row].set(v_upd)
+    bt = block_table.astype(jnp.int32)
+    ka = kc[bt].reshape(b, npp * ps, cfg.n_kv_heads, cfg.hd)
+    va = vc[bt].reshape(b, npp * ps, cfg.n_kv_heads, cfg.hd)
+    if quant:
+        from repro.quant.qtypes import dequantize_kv
+        ka = dequantize_kv(ka, newc["k_scale"][bt].reshape(b, npp * ps, -1)
+                           ).astype(x.dtype)
+        va = dequantize_kv(va, newc["v_scale"][bt].reshape(b, npp * ps, -1)
+                           ).astype(x.dtype)
+    o = L.flash_attention(q, ka, va, causal=True, window=window, q_pos=pos,
+                          **_attn_kw(cfg))
+    o = o.reshape(b, t, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = L.moe(p["moe"], h, cfg, capacity=b * t)
+    else:
+        y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
+    return x + y, {"k": kc, "v": vc, **newc}
+
+
 # ---------------------------------------------------------------------------
 # RG-LRU recurrent block (RecurrentGemma / Griffin)
 # ---------------------------------------------------------------------------

@@ -400,6 +400,54 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
+                           window=None, scale=None, backend: str = "ref",
+                           cfg="auto", k_scale=None, v_scale=None):
+    """Single-token attention against a PAGED cache.  q: (B,1,H,D);
+    pools: (P, page_size, Hkv, D) shared by every slot; block_table:
+    (B, npp) int32 per-slot logical->physical page map; pos: (B,).
+
+    backend="pallas" dispatches the block-table split-KV kernel
+    (kernels/decode_attention.make_paged_kernel; the kv block IS the page,
+    cfg resolved through the "decode_attention_paged" tuner family — page
+    size joins the spec key).  The fallback gathers the table into a
+    contiguous per-slot view and runs the dense einsum path — which is also
+    the parity oracle the paged kernel is tested against.
+
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) mark int8 pools
+    (cfg.kv_quant="int8"): dequant is fused into the kernel pass; the
+    fallback dequantizes the gathered view first.
+    """
+    b, _, h, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    npp = block_table.shape[1]
+    if backend == "pallas" and h % hkv == 0:
+        from repro.kernels import ops
+        params = dict(page_size=ps, window=window or 0)
+        if k_scale is not None:
+            params["kv_bits"] = 8
+        rcfg = ops.resolve_cfg(cfg, "decode_attention_paged",
+                               (b, h, hkv, npp, d),
+                               dtype=k_pool.dtype.name,
+                               backend="pallas", **params)
+        # an explicit degree the per-slot page count can't tile falls back
+        if npp % rcfg.degree == 0:
+            return ops.paged_decode_attention(
+                q, k_pool, v_pool, block_table, pos, rcfg, window=window,
+                scale=scale, k_scale=k_scale, v_scale=v_scale)
+    # gather-to-contiguous fallback (and the paged kernel's parity oracle)
+    bt = block_table.astype(jnp.int32)
+    k_view = k_pool[bt].reshape(b, npp * ps, hkv, d)
+    v_view = v_pool[bt].reshape(b, npp * ps, hkv, d)
+    ks = vs = None
+    if k_scale is not None:
+        ks = k_scale[bt].reshape(b, npp * ps, hkv)
+        vs = v_scale[bt].reshape(b, npp * ps, hkv)
+    return decode_attention(q, k_view, v_view, pos, window=window,
+                            scale=scale, backend="ref",
+                            k_scale=ks, v_scale=vs)
+
+
 # --------------------------------------------------------------------------
 # attention block params
 # --------------------------------------------------------------------------

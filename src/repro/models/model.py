@@ -57,8 +57,14 @@ def _block_apply(kind: str, p, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
     raise ValueError(kind)
 
 
-def _block_decode(kind: str, p, x, cfg, cache, *, pos, shard):
+def _block_decode(kind: str, p, x, cfg, cache, *, pos, shard,
+                  block_table=None):
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if block_table is not None:
+            return B.attn_block_decode_paged(p, x, cfg, cache, kind=kind,
+                                             pos=pos,
+                                             block_table=block_table,
+                                             shard=shard)
         return B.attn_block_decode(p, x, cfg, cache, kind=kind, pos=pos,
                                    shard=shard)
     if kind == RECURRENT:
@@ -343,9 +349,45 @@ def lm_init_cache(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16,
     return cache
 
 
+def lm_init_cache_paged(cfg: ModelConfig, b: int, num_pages: int,
+                        page_size: int, dtype=jnp.bfloat16):
+    """Paged decode cache: attention K/V lives in GLOBAL page pools shared
+    by every slot (stacked (n_periods, P, page_size, kv, hd) leaves — no
+    batch axis; a slot's rows are reached through its block table), while
+    recurrent/SSM state keeps the per-slot batch layout.  Every attention
+    layer shares ONE page id space: page p means row p of each layer's
+    pool, so the allocator hands out ids once and they apply stack-wide.
+
+    Enc-dec models are out of scope (the cross K/V cache is inherently
+    per-slot and the decoder self-attn path has no paged twin)."""
+    if cfg.is_encdec:
+        raise NotImplementedError("paged KV cache: enc-dec models are not "
+                                  "supported (use lm_init_cache)")
+    period, n_periods, tail = _period(cfg)
+
+    def cache_for(kind, stacked_n=None):
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            c = B.attn_cache_init_paged(cfg, num_pages, page_size, dtype)
+        else:
+            c = _block_cache(kind, cfg, b, s_max=0, dtype=dtype)
+        if stacked_n is None:
+            return c
+        return jax.tree.map(
+            lambda a: jnp.zeros((stacked_n,) + a.shape, a.dtype), c)
+
+    return {
+        "blocks": [cache_for(kind, n_periods) for kind in period],
+        "tail": [cache_for(kind) for kind in tail],
+    }
+
+
 def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
-                   shard: ShardCtx = NOSHARD):
-    """tokens: (B,1) int32; pos: (B,) int32 -> (logits (B,V), new cache)."""
+                   shard: ShardCtx = NOSHARD, block_table=None):
+    """tokens: (B,1) int32; pos: (B,) int32 -> (logits (B,V), new cache).
+
+    ``block_table`` (B, npp) int32 switches the attention layers to the
+    PAGED cache layout (pool leaves + table-routed scatters; see
+    lm_init_cache_paged) — non-attention state is unaffected."""
     period, n_periods, tail = _period(cfg)
     x = _embed(params, tokens, cfg, {"tokens": tokens})
 
@@ -366,7 +408,8 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
                                            {**cblk[j]}, pos=pos)
             else:
                 x, nc = _block_decode(kind, pblk[j], x, cfg, cblk[j],
-                                      pos=pos, shard=shard)
+                                      pos=pos, shard=shard,
+                                      block_table=block_table)
             newc.append(nc)
         caches = [jax.tree.map(
             lambda a, u: lax.dynamic_update_index_in_dim(a, u, i, 0), c, nc)
@@ -378,7 +421,8 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
         tuple(params["blocks"]))
     new_tail = []
     for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
-        x, nc = _block_decode(kind, p_t, x, cfg, c_t, pos=pos, shard=shard)
+        x, nc = _block_decode(kind, p_t, x, cfg, c_t, pos=pos, shard=shard,
+                              block_table=block_table)
         new_tail.append(nc)
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -387,8 +431,12 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     return logits, {"blocks": list(new_blocks), "tail": new_tail}
 
 
-def _block_prefill(kind: str, p, x, cfg, cache, *, pos0):
+def _block_prefill(kind: str, p, x, cfg, cache, *, pos0, block_table=None):
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if block_table is not None:
+            return B.attn_block_prefill_paged(p, x, cfg, cache, kind=kind,
+                                              pos0=pos0,
+                                              block_table=block_table)
         return B.attn_block_prefill(p, x, cfg, cache, kind=kind, pos0=pos0)
     if kind == RECURRENT:
         return B.rglru_block_prefill(p, x, cfg, cache, pos0=pos0)
@@ -439,7 +487,7 @@ def _prefill_enc_cache(params, batch, cfg, cache):
 
 def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
                cache=None, pos0=None, mask=None, shard: ShardCtx = NOSHARD,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, block_table=None):
     """Chunked prefill: push a (B, T) token chunk through the stack, FILLING
     the decode caches (attention K/V rows [pos0, pos0+T), recurrent/SSM/conv
     states advanced T steps, enc-dec cross K/V from src_frames).
@@ -452,6 +500,10 @@ def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
     when None).  pos0: (B,) chunk start positions (default zeros).
     mask: optional (B,) bool — only masked slots commit cache/state updates
     (the continuous-batching admit path: other slots' caches are untouched).
+    block_table: (B, npp) int32 — PAGED attention caches (see
+    lm_init_cache_paged); attention writes route through the table (the
+    caller nulls non-admitted slots' rows, which IS their write protection,
+    so ``mask`` only guards the per-slot recurrent/SSM leaves).
     Returns (last-chunk-token logits (B, vocab) f32, new cache).
     """
     tokens = batch["tokens"]
@@ -459,6 +511,9 @@ def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
     if cache is None:
         if s_max is None:
             raise ValueError("lm_prefill needs either a cache or s_max")
+        if block_table is not None:
+            raise ValueError("paged prefill needs an explicit cache from "
+                             "lm_init_cache_paged")
         cache = lm_init_cache(cfg, b, s_max, dtype)
     if pos0 is None:
         pos0 = jnp.zeros((b,), jnp.int32)
@@ -483,7 +538,7 @@ def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
                                             pos0=pos0)
             else:
                 x, nc = _block_prefill(kind, pblk[j], x, cfg, cblk[j],
-                                       pos0=pos0)
+                                       pos0=pos0, block_table=block_table)
             newc.append(nc)
         caches = [jax.tree.map(
             lambda a, u: lax.dynamic_update_index_in_dim(a, u, i, 0), c, nc)
@@ -495,17 +550,27 @@ def lm_prefill(params, batch, cfg: ModelConfig, s_max: int | None = None, *,
         tuple(params["blocks"]))
     new_tail = []
     for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
-        x, nc = _block_prefill(kind, p_t, x, cfg, c_t, pos0=pos0)
+        x, nc = _block_prefill(kind, p_t, x, cfg, c_t, pos0=pos0,
+                               block_table=block_table)
         new_tail.append(nc)
 
     new_cache = {"blocks": list(new_blocks), "tail": new_tail}
     if mask is not None:
+        def committed(n, o, kind, batch_axis):
+            # paged attention pools have NO batch axis — the null-routed
+            # block table already confined the writes, so the new pool is
+            # committed as-is; everything per-slot keeps the mask select
+            if block_table is not None and kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                return n
+            return _select_slots(mask, n, o, batch_axis=batch_axis)
+
         new_cache = {
-            "blocks": [_select_slots(mask, n, o, batch_axis=1)
-                       for n, o in zip(new_cache["blocks"],
-                                       old_cache["blocks"])],
-            "tail": [_select_slots(mask, n, o, batch_axis=0)
-                     for n, o in zip(new_cache["tail"], old_cache["tail"])],
+            "blocks": [committed(n, o, kind, 1)
+                       for n, o, kind in zip(new_cache["blocks"],
+                                             old_cache["blocks"], period)],
+            "tail": [committed(n, o, kind, 0)
+                     for n, o, kind in zip(new_cache["tail"],
+                                           old_cache["tail"], tail)],
         }
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)

@@ -1,0 +1,17 @@
+"""Paged-KV serving subsystem.
+
+``paging``     — the global page pool (free-list allocation, refcounting for
+                 shared-prefix pages) and per-slot block tables.
+``scheduler``  — FCFS + preemption continuous-batching scheduler, engine-
+                 agnostic (property-testable against a fake engine).
+``engine``     — PagedEngine: the model-coupled serving engine (paged cache,
+                 chunked prefill through page allocation, on-device decode
+                 blocks, preempt/resume).
+"""
+from repro.serve.engine import PagedEngine
+from repro.serve.paging import (NULL_PAGE, BlockTables, PagePool,
+                                PoolExhausted, pages_needed)
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["NULL_PAGE", "BlockTables", "PagePool", "PoolExhausted",
+           "PagedEngine", "pages_needed", "Request", "Scheduler"]

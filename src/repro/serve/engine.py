@@ -1,0 +1,338 @@
+"""PagedEngine: the model-coupled paged-KV serving engine.
+
+Owns the paged decode cache (repro.models.model.lm_init_cache_paged), the
+page pool + block tables (repro.serve.paging), per-slot generation state,
+and the jitted prefill/decode steps.  The Scheduler drives it through the
+admit/decode/finish/preempt protocol (repro.serve.scheduler); it never
+schedules on its own.
+
+Key mechanics:
+
+* **Admission** allocates exactly the pages the prompt needs, prefills the
+  prompt in chunks through the block table (non-admitted slots' table rows
+  are NULLed, so their garbage writes land on the null page — the paged
+  replacement for the contiguous path's whole-cache mask select), and
+  returns the first greedy token from the prefill logits.
+* **Decode** grows each running slot's table on demand (pages covering the
+  rows the next block will write) before launching a jitted on-device
+  decode block; pool exhaustion surfaces as PoolExhausted for the scheduler
+  to translate into a preemption.
+* **Shared prefixes** are registered once (prefilled into their own pages +
+  a snapshot of the non-paged per-slot state) and admitted by refcount:
+  an admit whose prompt starts with the registered page-aligned token
+  prefix increfs those pages instead of recomputing them.
+* **Preempt/finish** release the slot's pages (decref — shared pages
+  survive in the registry) and clear the slot.
+
+Greedy sampling only: determinism (a request's outputs are identical to
+running it alone, whatever the co-residents) is part of the contract the
+scheduler simulation tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, ATTN_GLOBAL, ATTN_LOCAL
+from repro.serve.paging import (BlockTables, PagePool, PoolExhausted,
+                                pages_needed)
+
+
+@dataclasses.dataclass
+class PrefixRecord:
+    """A registered shared prefix: its page-aligned token prefix, the pages
+    holding those rows (registry keeps one refcount), and a snapshot of the
+    non-paged per-slot state (recurrent/SSM/conv) after ingesting it."""
+    tokens: tuple
+    pages: list
+    state: Any              # {"blocks": [leaf rows...], "tail": [...]}
+
+
+def _tree_mib(tree) -> float:
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree) if hasattr(x, "dtype")) / 2**20
+
+
+class PagedEngine:
+    """Paged-KV serving engine for one model instance.
+
+    num_pages counts POOL pages including the reserved null page; the
+    per-slot table holds ceil(max_len / page_size) entries and admission
+    rejects any prompt_len + gen_tokens > max_len outright (the contiguous
+    server's silent `max_len - 1` truncation has no paged analog)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int,
+                 num_pages: int, page_size: int, max_len: int,
+                 chunk: int = 16, decode_block: int = 1,
+                 tune: str | None = None, decode_backend: str | None = None,
+                 moe_backend: str | None = None, quant: str | None = None,
+                 kv_quant: str | None = None):
+        if cfg.is_encdec:
+            raise NotImplementedError("PagedEngine: enc-dec models are not "
+                                      "supported")
+        if decode_backend is not None:
+            cfg = dataclasses.replace(cfg, decode_backend=decode_backend)
+        if moe_backend is not None:
+            cfg = dataclasses.replace(cfg, moe_backend=moe_backend)
+        if quant is not None:
+            cfg = dataclasses.replace(cfg, quant=quant)
+        if kv_quant is not None:
+            cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+        self.quant_report = None
+        if cfg.quant in ("int8", "int4"):
+            from repro.quant import quantize_params
+            params, self.quant_report = quantize_params(
+                params, cfg.quant, group=cfg.quant_group)
+        if tune:
+            from repro.tune import warm_from_flag
+            warm_from_flag(cfg, tune, seq=max_len, batch=slots,
+                           page_size=page_size)
+        self.cfg, self.params = cfg, params
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.chunk, self.decode_block = int(chunk), int(decode_block)
+        self.pool = PagePool(num_pages, page_size)
+        self.npp = pages_needed(max_len, page_size)
+        self.bt = BlockTables(slots, self.npp)
+        self.cache = M.lm_init_cache_paged(cfg, slots, num_pages, page_size)
+        self.cache_mib = _tree_mib(self.cache)
+        self.weight_mib = _tree_mib(params)
+
+        self.active = np.zeros((slots,), bool)
+        self.written = np.zeros((slots,), np.int32)   # cache rows filled
+        self.last = np.zeros((slots,), np.int32)      # last sampled token
+        self.remaining = np.zeros((slots,), np.int32)  # gen tokens left
+        self.prefixes: dict[str, PrefixRecord] = {}
+
+        self.prefill_steps = self.decode_steps = 0
+        self.prefill_tokens = self.decoded_tokens = 0
+        self.prefill_s = self.decode_s = 0.0
+        self._attn_kinds = self._kind_flags(cfg)
+        self._prefill = jax.jit(
+            lambda p, c, t, po, m, bt: M.lm_prefill(
+                p, {"tokens": t}, cfg, cache=c, pos0=po, mask=m,
+                block_table=bt))
+        self._decode_fns: dict[int, Any] = {}
+
+    # -- static layout helpers ----------------------------------------------
+
+    @staticmethod
+    def _kind_flags(cfg):
+        period, _, tail = M._period(cfg)
+        attn = (ATTN_GLOBAL, ATTN_LOCAL)
+        return ([k in attn for k in period], [k in attn for k in tail])
+
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    @property
+    def pool_capacity(self) -> int:
+        return self.pool.capacity
+
+    @property
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    def _device_table(self, active) -> jax.Array:
+        return jnp.asarray(self.bt.device(active=active), jnp.int32)
+
+    # -- per-slot non-paged state (recurrent/SSM/conv) ----------------------
+
+    def _nonpaged(self, cache, fn_blocks, fn_tail):
+        """Map over the NON-paged leaves only (paged pools pass through)."""
+        blk_attn, tail_attn = self._attn_kinds
+        blocks = [c if is_attn else jax.tree.map(fn_blocks, c)
+                  for c, is_attn in zip(cache["blocks"], blk_attn)]
+        tail = [c if is_attn else jax.tree.map(fn_tail, c)
+                for c, is_attn in zip(cache["tail"], tail_attn)]
+        return {"blocks": blocks, "tail": tail}
+
+    def _slot_reset(self, slot: int):
+        s = jnp.asarray(slot, jnp.int32)
+        self.cache = self._nonpaged(
+            self.cache,
+            lambda a: a.at[:, s].set(jnp.zeros((), a.dtype)),
+            lambda a: a.at[s].set(jnp.zeros((), a.dtype)))
+
+    def _slot_snapshot(self, slot: int):
+        return self._nonpaged(self.cache,
+                              lambda a: a[:, slot], lambda a: a[slot])
+
+    def _slot_load(self, slot: int, snap) -> None:
+        blk_attn, tail_attn = self._attn_kinds
+        s = jnp.asarray(slot, jnp.int32)
+        blocks = [c if is_attn else jax.tree.map(
+            lambda a, v: a.at[:, s].set(v), c, sc)
+            for c, sc, is_attn in zip(self.cache["blocks"],
+                                      snap["blocks"], blk_attn)]
+        tail = [c if is_attn else jax.tree.map(
+            lambda a, v: a.at[s].set(v), c, sc)
+            for c, sc, is_attn in zip(self.cache["tail"],
+                                      snap["tail"], tail_attn)]
+        self.cache = {"blocks": blocks, "tail": tail}
+
+    # -- prefill ------------------------------------------------------------
+
+    def _run_prefill(self, slot: int, tokens, pos_start: int):
+        """Chunked prefill of ``tokens`` into ``slot`` starting at row
+        ``pos_start``; returns the final chunk's logits row."""
+        mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
+        only = np.zeros((self.slots,), bool)
+        only[slot] = True
+        bt_dev = self._device_table(only)    # other slots' writes -> null
+        logits = None
+        t0 = time.perf_counter()
+        for i in range(0, len(tokens), self.chunk):
+            piece = tokens[i:i + self.chunk]
+            buf = np.zeros((self.slots, len(piece)), np.int32)
+            buf[slot] = piece
+            pos0 = jnp.asarray(self.written, jnp.int32).at[slot].set(
+                pos_start + i)
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(buf), pos0, mask,
+                bt_dev)
+            self.prefill_steps += 1
+        jax.block_until_ready(logits)
+        self.prefill_s += time.perf_counter() - t0
+        self.prefill_tokens += len(tokens)
+        return logits[slot]
+
+    # -- engine protocol ----------------------------------------------------
+
+    def admit(self, slot: int, req) -> int:
+        """Allocate pages, ingest the prompt, return the first greedy token.
+        Raises ValueError for prompts that can never fit, PoolExhausted when
+        the pool can't serve the prompt right now (no partial effects)."""
+        if self.active[slot]:
+            raise RuntimeError(f"slot {slot} is already running")
+        prompt, gen = list(req.prompt), int(req.gen)
+        if not prompt or gen < 1:
+            raise ValueError("admit needs a non-empty prompt and gen >= 1")
+        if len(prompt) + gen > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + gen ({gen}) tokens exceed "
+                f"max_len {self.max_len}; rejecting instead of truncating")
+
+        pre = self.prefixes.get(req.prefix) if req.prefix else None
+        start = 0
+        shared: list[int] = []
+        if pre is not None and len(pre.tokens) <= len(prompt) - 1 \
+                and tuple(prompt[: len(pre.tokens)]) == pre.tokens:
+            start, shared = len(pre.tokens), pre.pages
+        fresh = self.pool.alloc(pages_needed(len(prompt), self.page_size)
+                                - len(shared))   # raises, no side effects
+        self.pool.incref(shared)
+        self.bt.append(slot, list(shared) + fresh)
+
+        self._slot_reset(slot)
+        if start:
+            self._slot_load(slot, pre.state)
+        logits = self._run_prefill(slot, prompt[start:], start)
+        first = int(jnp.argmax(logits))
+        self.active[slot] = True
+        self.written[slot] = len(prompt)
+        self.last[slot] = first
+        self.remaining[slot] = gen - 1
+        return first
+
+    def _decode_fn(self, n: int):
+        fn = self._decode_fns.get(n)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+
+        def run(params, cache, tok, pos, bt):
+            def body(carry, _):
+                tok, pos, cache = carry
+                logits, cache = M.lm_decode_step(params, cache, tok, pos,
+                                                 cfg, block_table=bt)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (nxt[:, None], pos + 1, cache), nxt
+
+            (_, _, cache), toks = jax.lax.scan(
+                body, (tok, pos, cache), jnp.arange(n))
+            return toks.T, cache                         # (slots, n)
+
+        fn = self._decode_fns[n] = jax.jit(run)
+        return fn
+
+    def decode(self, slots) -> dict[int, list[int]]:
+        """Run a decode block for the running ``slots``; returns the new
+        greedy tokens per slot.  Page growth happens BEFORE the launch;
+        PoolExhausted propagates to the scheduler (slots whose growth
+        already succeeded keep their pages — consistent, not leaked)."""
+        slots = [s for s in slots if self.active[s]]
+        if not slots:
+            return {}
+        n = max(1, min(self.decode_block,
+                       *(int(self.remaining[s]) for s in slots)))
+        for s in slots:
+            need = pages_needed(int(self.written[s]) + n, self.page_size) \
+                - self.bt.num_pages(s)
+            if need > 0:
+                self.bt.append(s, self.pool.alloc(need))
+        tokens = np.zeros((self.slots, 1), np.int32)
+        tokens[slots, 0] = self.last[slots]
+        t0 = time.perf_counter()
+        toks, self.cache = self._decode_fn(n)(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.written, jnp.int32),
+            self._device_table(self.active))
+        toks = np.asarray(toks)
+        self.decode_s += time.perf_counter() - t0
+        self.decode_steps += n
+        self.decoded_tokens += n * len(slots)
+        out = {}
+        for s in slots:
+            out[s] = [int(v) for v in toks[s]]
+            self.last[s] = toks[s, -1]
+            self.written[s] += n
+            self.remaining[s] -= n
+        return out
+
+    def _drop(self, slot: int) -> None:
+        self.pool.release(self.bt.drop(slot))
+        self.active[slot] = False
+        self.written[slot] = self.last[slot] = self.remaining[slot] = 0
+
+    def finish(self, slot: int) -> None:
+        self._drop(slot)
+
+    def preempt(self, slot: int) -> None:
+        self._drop(slot)
+
+    # -- shared prefixes ----------------------------------------------------
+
+    def register_prefix(self, name: str, tokens) -> int:
+        """Prefill the page-aligned head of ``tokens`` once and pin its
+        pages under ``name`` (refcount held by the registry); returns the
+        number of tokens the record covers (0 = too short to share).
+        Needs a free slot to run the prefill in."""
+        reg_len = (len(tokens) // self.page_size) * self.page_size
+        if reg_len == 0:
+            return 0
+        free = [s for s in range(self.slots) if not self.active[s]]
+        if not free:
+            raise RuntimeError("register_prefix needs a free slot")
+        slot = free[0]
+        pages = self.pool.alloc(pages_needed(reg_len, self.page_size))
+        self.bt.append(slot, pages)
+        self._slot_reset(slot)
+        self._run_prefill(slot, list(tokens)[:reg_len], 0)
+        snap = self._slot_snapshot(slot)
+        self.bt.drop(slot)        # registry keeps the pages' refcount
+        self.prefixes[name] = PrefixRecord(
+            tokens=tuple(int(t) for t in tokens[:reg_len]), pages=pages,
+            state=snap)
+        return reg_len
+
+    def drop_prefix(self, name: str) -> None:
+        pre = self.prefixes.pop(name)
+        self.pool.release(pre.pages)

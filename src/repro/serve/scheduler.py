@@ -1,0 +1,173 @@
+"""FCFS + preemption continuous-batching scheduler.
+
+The scheduler is deliberately engine-agnostic: it talks to anything with the
+five-method surface below, which makes every scheduling invariant (each
+request completes, FCFS admission order, no starvation under preemption,
+page conservation) property-testable against a fake engine with no model or
+device in the loop — and the same loop then drives the real ``PagedEngine``.
+
+Engine protocol::
+
+    engine.slots            -> int, number of batch slots
+    engine.admit(slot, request) -> first greedy token (from the prefill
+                                     # logits) or None; may raise
+                                     # PoolExhausted (no partial effects)
+    engine.decode(slots)    -> {slot: [new_token, ...]} for the RUNNING
+                                     # slots; may raise PoolExhausted when
+                                     # page growth fails mid-decode, after
+                                     # rolling back to a consistent state
+    engine.finish(slot)              # frees the slot's pages
+    engine.preempt(slot)             # drop cache pages, forget progress
+
+Preemption policy: on ``PoolExhausted`` the *youngest* running request
+(latest arrival) is preempted and requeued at the head of the wait queue in
+arrival order — the oldest request is never the victim, so it monotonically
+keeps its pages and finishes; once it frees them the next-oldest holds the
+same property.  That induction is the no-starvation guarantee, and it holds
+as long as a lone worst-case request fits the pool (checked at submit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+
+from repro.serve.paging import PoolExhausted, pages_needed
+
+
+class State(Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    PREEMPTED = "preempted"   # requeued after a cache drop; restarts clean
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request. ``prefix`` optionally names a registered
+    shared prefix whose pages are refcount-shared instead of recomputed."""
+    rid: int
+    prompt: list[int]
+    gen: int
+    prefix: str | None = None
+    state: State = State.WAITING
+    arrival: int = 0              # admission priority (FCFS ties by rid)
+    preemptions: int = 0
+    output: list[int] = field(default_factory=list)
+
+    @property
+    def key(self):
+        return (self.arrival, self.rid)
+
+
+class Scheduler:
+    """Drives an engine: admit waiting requests FCFS into free slots, decode
+    the running set, preempt the youngest on pool exhaustion."""
+
+    def __init__(self, engine, *, max_preemptions: int = 64):
+        self.engine = engine
+        self.waiting: list[Request] = []
+        self.running: dict[int, Request] = {}   # slot -> request
+        self.finished: list[Request] = []
+        self._clock = 0
+        self._rid = 0
+        self.max_preemptions = max_preemptions
+        self.steps = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompt, gen: int, *, prefix: str | None = None) -> Request:
+        max_len = getattr(self.engine, "max_len", None)
+        if max_len is not None and len(prompt) + gen > max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + gen ({gen}) tokens exceed max_len "
+                f"{max_len}; rejecting instead of truncating")
+        worst = pages_needed(len(prompt) + gen, self.engine.page_size) \
+            if hasattr(self.engine, "page_size") else 0
+        cap = getattr(self.engine, "pool_capacity", None)
+        if cap is not None and worst > cap:
+            raise ValueError(
+                f"request needs {worst} pages even running alone; pool holds "
+                f"{cap} — it could never be scheduled")
+        req = Request(rid=self._rid, prompt=list(prompt), gen=int(gen),
+                      prefix=prefix, arrival=self._clock)
+        self._rid += 1
+        self._clock += 1
+        self.waiting.append(req)
+        return req
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _free_slots(self):
+        return [s for s in range(self.engine.slots) if s not in self.running]
+
+    def _admit_waiting(self) -> None:
+        """FCFS: oldest waiting request into lowest free slot; stop at the
+        first admission failure (admitting younger over older would break
+        arrival order)."""
+        self.waiting.sort(key=lambda r: r.key)
+        while self.waiting and (free := self._free_slots()):
+            req, slot = self.waiting[0], free[0]
+            try:
+                first = self.engine.admit(slot, req)
+            except PoolExhausted:
+                if not self.running:
+                    # nothing to evict — must be admissible alone, so the
+                    # engine's pool state is inconsistent with submit()'s
+                    # worst-case check
+                    raise
+                break
+            req.state = State.RUNNING
+            if first is not None:
+                req.output.append(int(first))
+            self.running[slot] = req
+            self.waiting.pop(0)
+
+    def _preempt_youngest(self) -> None:
+        slot, req = max(self.running.items(), key=lambda kv: kv[1].key)
+        self.engine.preempt(slot)
+        del self.running[slot]
+        req.state = State.PREEMPTED
+        req.preemptions += 1
+        req.output = []
+        if req.preemptions > self.max_preemptions:
+            raise RuntimeError(
+                f"request {req.rid} preempted {req.preemptions} times — "
+                f"livelock (pool too small for the running set?)")
+        self.waiting.append(req)   # key() keeps original arrival order
+
+    def _retire(self) -> None:
+        for slot in [s for s, r in self.running.items()
+                     if len(r.output) >= r.gen]:
+            req = self.running.pop(slot)
+            self.engine.finish(slot)
+            req.output = req.output[: req.gen]
+            req.state = State.FINISHED
+            self.finished.append(req)
+
+    def step(self) -> bool:
+        """One scheduling quantum: admit, decode, retire. Returns True while
+        any work remains."""
+        self._admit_waiting()
+        self._retire()                      # a gen==1 request ends at admit
+        if not self.running:
+            return bool(self.waiting)
+        self.steps += 1
+        while True:
+            try:
+                new = self.engine.decode(sorted(self.running))
+                break
+            except PoolExhausted:
+                self._preempt_youngest()
+                if not self.running:
+                    return bool(self.waiting)
+        for slot, toks in new.items():
+            self.running[slot].output.extend(int(t) for t in toks)
+        self._retire()
+        return bool(self.waiting or self.running)
+
+    def run_until_done(self, *, max_steps: int = 100_000):
+        while self.step():
+            if self.steps > max_steps:
+                raise RuntimeError("scheduler did not converge")
+        assert not self.waiting and not self.running
+        return sorted(self.finished, key=lambda r: r.rid)

@@ -180,6 +180,16 @@ def enumerate_candidates(spec: KernelSpec,
             for kind, deg in _kind_degree_pairs(degrees):
                 if s % (bkv * deg) == 0:
                     out.append(CoarseningConfig(kind, deg))
+    elif fam == "decode_attention_paged":
+        b, h, hkv, npp, d = spec.shape
+        # block-table paging: the kv block IS the page, so each program owns
+        # C logical pages (consecutive = C adjacent table entries, gapped =
+        # C entries strided npp/C apart — physically both are C table-
+        # resolved page loads) and the degree must divide the per-slot page
+        # count.  Replication and SIMD are not implemented -> excluded.
+        for kind, deg in _kind_degree_pairs(degrees):
+            if npp % deg == 0:
+                out.append(CoarseningConfig(kind, deg))
     elif fam == "moe_ffn":
         e, cap, d, f = spec.shape
         # expert-axis coarsening: each program owns `degree` whole experts,
@@ -298,6 +308,14 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
             b, h, hkv, s, d, cfg, bkv=p.get("bkv", 128),
             kv_len=p.get("kv_len", None), dtype_bytes=dtb,
             kv_bits=p.get("kv_bits")).modeled_s
+
+    if fam == "decode_attention_paged":
+        b, h, hkv, npp, d = spec.shape
+        ps = p.get("page_size", 64)
+        return analysis.decode_attention_cost(
+            b, h, hkv, npp * ps, d, cfg, bkv=ps,
+            kv_len=p.get("kv_len", None), dtype_bytes=dtb,
+            kv_bits=p.get("kv_bits"), page_size=ps).modeled_s
 
     if fam == "moe_ffn":
         e, cap, d, f = spec.shape

@@ -26,7 +26,8 @@ TUNE_CHOICES = ("auto", "model", "greedy", "exhaustive")
 
 
 def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
-                   cache: Optional[TuningCache] = None) -> dict:
+                   cache: Optional[TuningCache] = None,
+                   page_size: Optional[int] = None) -> dict:
     """The launch drivers' --tune entry point: map the flag value to a
     (strategy, measurer) pair and warm the cache."""
     if tune not in TUNE_CHOICES:
@@ -34,13 +35,15 @@ def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
     measure = wall_measurer() if tune in ("greedy", "exhaustive") else None
     strategy = "model" if tune == "auto" else tune
     return warm_for_model(cfg, seq=seq, batch=batch, cache=cache,
-                          measure=measure, strategy=strategy)
+                          measure=measure, strategy=strategy,
+                          page_size=page_size)
 
 
 def warm_for_model(cfg, *, seq: int, batch: int,
                    cache: Optional[TuningCache] = None,
                    measure=None, strategy: str = "model",
-                   verbose: bool = True) -> dict:
+                   verbose: bool = True,
+                   page_size: Optional[int] = None) -> dict:
     """Autotune the kernel families a model step exercises; returns
     {family: winning-label}.  cfg is a repro.models.config.ModelConfig."""
     cache = cache or default_cache()
@@ -128,6 +131,23 @@ def warm_for_model(cfg, *, seq: int, batch: int,
             "decode_attention",
             (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
             dtype="bfloat16", bkv=min(128, seq), window=cfg.window)
+    if page_size:
+        # paged serving: the block-table decode family at the per-slot page
+        # budget (page size joins the spec key — different page sizes are
+        # different kernels with different winning degrees)
+        npp = max(1, seq // page_size)
+        kv_q = getattr(cfg, "kv_quant", "none") == "int8"
+        specs["decode_attention_paged"] = KernelSpec.make(
+            "decode_attention_paged",
+            (batch, cfg.n_heads, cfg.n_kv_heads, npp, cfg.hd),
+            dtype="int8" if kv_q else "bfloat16", page_size=page_size,
+            window=0, **({"kv_bits": 8} if kv_q else {}))
+        if cfg.window:
+            specs["decode_attention_paged_local"] = KernelSpec.make(
+                "decode_attention_paged",
+                (batch, cfg.n_heads, cfg.n_kv_heads, npp, cfg.hd),
+                dtype="int8" if kv_q else "bfloat16", page_size=page_size,
+                window=cfg.window, **({"kv_bits": 8} if kv_q else {}))
     out = {}
     for fam, spec in specs.items():
         try:
@@ -228,6 +248,32 @@ def wall_measurer(reps: int = 3):
                 fn = lambda: ops.decode_attention(q, kc, vc, pos, cfg,
                                                   bkv=p.get("bkv", 128),
                                                   window=w)
+        elif spec.family == "decode_attention_paged":
+            b, h, hkv, npp, d = spec.shape
+            ps = p.get("page_size", 64)
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            # a worst-case fragmented pool: every slot's pages permuted
+            n_pages = b * npp + 1
+            q = jax.random.normal(key, (b, 1, h, d), dt)
+            kp = jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_pages, ps, hkv, d), dt)
+            vp = jax.random.normal(jax.random.fold_in(key, 2),
+                                   (n_pages, ps, hkv, d), dt)
+            bt = jnp.asarray(jax.random.permutation(
+                jax.random.fold_in(key, 3),
+                jnp.arange(1, n_pages)).reshape(b, npp), jnp.int32)
+            pos = jnp.full((b,), npp * ps - 1, jnp.int32)
+            w = p.get("window", 0) or None
+            if p.get("kv_bits"):
+                from repro.quant import quantize_kv
+                kq, ks = quantize_kv(kp.astype(jnp.float32))
+                vq, vs = quantize_kv(vp.astype(jnp.float32))
+                fn = lambda: ops.paged_decode_attention(
+                    q, kq, vq, bt, pos, cfg, window=w, k_scale=ks,
+                    v_scale=vs)
+            else:
+                fn = lambda: ops.paged_decode_attention(
+                    q, kp, vp, bt, pos, cfg, window=w)
         elif spec.family in ("flash_attention", "flash_attention_bwd"):
             b, h, hkv, sq, sk, d = spec.shape
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,291 @@
+"""Executable spec of the page pool + block tables (repro.serve.paging).
+
+Two layers:
+
+* deterministic tests (always run): unit edges + a seeded np.random
+  admit/grow/finish/preempt random walk asserting the pool invariants at
+  every step — these keep tier-1 coverage even where hypothesis isn't
+  installed;
+* hypothesis property tests (skipped without the package): the same
+  invariants driven by minimized counterexample search over arbitrary op
+  sequences.
+
+Invariants under test (module docstring of paging.py):
+  * a writable page (refcount == 1) appears in at most one block table
+  * free + live == num_pages - 1 (the null page is neither)
+  * a refcount-shared page is freed exactly when the last holder releases
+  * any admit/decode/finish/preempt sequence conserves pages (no leaks)
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (NULL_PAGE, BlockTables, PagePool, PoolExhausted,
+                         pages_needed)
+
+
+# ---------------------------------------------------------------------------
+# unit edges
+# ---------------------------------------------------------------------------
+
+def test_pages_needed():
+    assert pages_needed(0, 8) == 0
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+    assert pages_needed(64, 16) == 4
+
+
+def test_alloc_never_hands_out_null_page():
+    pool = PagePool(5, 8)
+    pages = pool.alloc(4)
+    assert NULL_PAGE not in pages
+    assert sorted(pages) == [1, 2, 3, 4]
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1)
+    pool.release(pages)
+    assert pool.num_free == 4
+
+
+def test_alloc_failure_has_no_side_effects():
+    pool = PagePool(5, 8)
+    pool.alloc(2)
+    free_before = list(pool._free)
+    rc_before = pool.refcount.copy()
+    with pytest.raises(PoolExhausted):
+        pool.alloc(3)
+    assert pool._free == free_before
+    np.testing.assert_array_equal(pool.refcount, rc_before)
+    pool.check()
+
+
+def test_double_free_raises():
+    pool = PagePool(4, 8)
+    (p,) = pool.alloc(1)
+    pool.release([p])
+    with pytest.raises(ValueError, match="double free"):
+        pool.release([p])
+
+
+def test_incref_dead_page_raises():
+    pool = PagePool(4, 8)
+    with pytest.raises(ValueError):
+        pool.incref([1])
+    with pytest.raises(ValueError):
+        pool.incref([NULL_PAGE])
+
+
+def test_refcounted_shared_page_freed_only_at_zero():
+    pool = PagePool(6, 8)
+    shared = pool.alloc(2)          # registry holds refcount 1
+    pool.incref(shared)             # slot A admits
+    pool.incref(shared)             # slot B admits
+    pool.release(shared)            # A finishes
+    assert pool.num_free == 3
+    assert all(pool.refcount[p] == 2 for p in shared)
+    pool.release(shared)            # B finishes
+    assert pool.num_free == 3       # registry still pins them
+    pool.release(shared)            # registry drops the prefix
+    assert pool.num_free == 5
+    pool.check()
+
+
+def test_block_table_overflow_raises_and_leaves_table_intact():
+    bt = BlockTables(2, 3)
+    bt.append(0, [5, 6])
+    with pytest.raises(PoolExhausted):
+        bt.append(0, [7, 8])
+    assert bt[0] == [5, 6]
+
+
+def test_device_image_null_padding_and_active_nulling():
+    bt = BlockTables(3, 4)
+    bt.append(0, [3, 1])
+    bt.append(2, [2])
+    img = bt.device()
+    assert img.dtype == np.int32
+    np.testing.assert_array_equal(img[0], [3, 1, NULL_PAGE, NULL_PAGE])
+    np.testing.assert_array_equal(img[1], NULL_PAGE)
+    np.testing.assert_array_equal(
+        bt.device(active=[False, False, True])[0], NULL_PAGE)
+    np.testing.assert_array_equal(
+        bt.device(active=[False, False, True])[2], [2, 0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# the serving random walk (deterministic; mirrors the scheduler's use)
+# ---------------------------------------------------------------------------
+
+def _assert_invariants(pool: PagePool, bt: BlockTables, shared: set):
+    pool.check()
+    assert pool.num_free + pool.num_live == pool.capacity
+    owners = bt.owners()
+    assert NULL_PAGE not in owners, "null page inside a live block table"
+    for page, slots in owners.items():
+        assert pool.refcount[page] >= 1
+        if pool.refcount[page] == 1:
+            assert len(slots) == 1, \
+                f"writable page {page} owned by slots {slots}"
+        else:
+            assert page in shared or len(slots) <= pool.refcount[page]
+
+
+def _random_walk(seed: int, steps: int = 300):
+    rng = np.random.default_rng(seed)
+    slots, npp, ps = 4, 8, 8
+    pool = PagePool(int(rng.integers(6, 20)), ps)
+    bt = BlockTables(slots, npp)
+    written = [0] * slots
+    active = [False] * slots
+    # one registered prefix, pinned by the registry for the whole walk
+    try:
+        prefix_pages = pool.alloc(min(2, pool.capacity))
+    except PoolExhausted:
+        prefix_pages = []
+    shared = set(prefix_pages)
+    holds_prefix = [False] * slots
+
+    for _ in range(steps):
+        op = rng.choice(["admit", "grow", "finish", "preempt"])
+        s = int(rng.integers(slots))
+        if op == "admit" and not active[s]:
+            n_tok = int(rng.integers(1, npp * ps))
+            use_prefix = bool(prefix_pages) and bool(rng.integers(2)) \
+                and n_tok > len(prefix_pages) * ps
+            base = prefix_pages if use_prefix else []
+            try:
+                fresh = pool.alloc(pages_needed(n_tok, ps) - len(base))
+            except PoolExhausted:
+                continue
+            pool.incref(base)
+            bt.append(s, list(base) + fresh)
+            active[s], written[s] = True, n_tok
+            holds_prefix[s] = use_prefix
+        elif op == "grow" and active[s]:
+            n = int(rng.integers(1, 2 * ps))
+            need = pages_needed(written[s] + n, ps) - bt.num_pages(s)
+            if need > 0:
+                if bt.num_pages(s) + need > npp:
+                    continue
+                try:
+                    bt.append(s, pool.alloc(need))
+                except PoolExhausted:
+                    continue
+            written[s] += n
+        elif op in ("finish", "preempt") and active[s]:
+            pool.release(bt.drop(s))
+            active[s], written[s] = False, 0
+            holds_prefix[s] = False
+        _assert_invariants(pool, bt, shared)
+
+    for s in range(slots):
+        if active[s]:
+            pool.release(bt.drop(s))
+    pool.release(prefix_pages)
+    assert pool.num_live == 0
+    assert pool.num_free == pool.capacity, "random walk leaked pages"
+    pool.check()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_admit_decode_finish_preempt_never_leaks(seed):
+    _random_walk(seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property layer (skipped cleanly where hypothesis is missing;
+# CI installs it via requirements-dev.txt)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    # deadline=None (shared CI machines make per-example timing flaky),
+    # bounded max_examples so tier-1 stays fast
+    FAST = settings(max_examples=40, deadline=None)
+
+    @given(st.integers(1, 64), st.integers(0, 2048))
+    @FAST
+    def test_prop_pages_needed_covers(ps, n_tok):
+        n = pages_needed(n_tok, ps)
+        assert n * ps >= n_tok
+        assert (n - 1) * ps < n_tok or n == 0
+
+    @given(st.integers(3, 24), st.lists(st.integers(0, 6), max_size=24))
+    @FAST
+    def test_prop_alloc_release_conserves(num_pages, sizes):
+        pool = PagePool(num_pages, 8)
+        held = []
+        for n in sizes:
+            try:
+                held.append(pool.alloc(n))
+            except PoolExhausted:
+                assert n > pool.num_free
+            assert pool.num_free + pool.num_live == pool.capacity
+            pool.check()
+        for pages in held:
+            pool.release(pages)
+        assert pool.num_free == pool.capacity
+
+    @given(st.data())
+    @FAST
+    def test_prop_serving_walk_invariants(data):
+        """Arbitrary admit/grow/finish interleavings: no aliasing of
+        writable pages, exact conservation, no leaks at the end."""
+        slots, npp, ps = 3, 6, 4
+        pool = PagePool(data.draw(st.integers(4, 16)), ps)
+        bt = BlockTables(slots, npp)
+        active = [False] * slots
+        written = [0] * slots
+        ops = data.draw(st.lists(
+            st.tuples(st.sampled_from(["admit", "grow", "stop"]),
+                      st.integers(0, slots - 1), st.integers(1, npp * ps)),
+            max_size=40))
+        for op, s, n_tok in ops:
+            if op == "admit" and not active[s]:
+                try:
+                    bt.append(s, pool.alloc(pages_needed(n_tok, ps)))
+                except PoolExhausted:
+                    continue
+                active[s], written[s] = True, n_tok
+            elif op == "grow" and active[s]:
+                need = pages_needed(written[s] + n_tok, ps) - bt.num_pages(s)
+                if need > 0:
+                    if bt.num_pages(s) + need > npp:
+                        continue
+                    try:
+                        bt.append(s, pool.alloc(need))
+                    except PoolExhausted:
+                        continue
+                written[s] += n_tok
+            elif op == "stop" and active[s]:
+                pool.release(bt.drop(s))
+                active[s] = False
+            _assert_invariants(pool, bt, set())
+        for s in range(slots):
+            if active[s]:
+                pool.release(bt.drop(s))
+        assert pool.num_free == pool.capacity
+        pool.check()
+
+    @given(st.integers(2, 5), st.integers(1, 4), st.integers(1, 4))
+    @FAST
+    def test_prop_shared_prefix_freed_at_refcount_zero(num_shared, a, b):
+        pool = PagePool(num_shared + 4, 8)
+        shared = pool.alloc(num_shared)
+        for _ in range(a + b):
+            pool.incref(shared)
+        for i in range(a + b):
+            pool.release(shared)
+            assert all(pool.refcount[p] == a + b - i for p in shared)
+        assert pool.num_free == pool.capacity - len(shared)
+        pool.release(shared)          # the registry's own refcount
+        assert pool.num_free == pool.capacity
+        pool.check()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed in this environment")
+    def test_prop_hypothesis_layer():
+        pass

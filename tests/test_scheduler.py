@@ -1,0 +1,303 @@
+"""Scheduler simulation suite.
+
+Layer 1 — FakeEngine (no model, no device): the scheduling invariants on
+synthetic mixed-length traces.  The fake emits a deterministic per-request
+token stream (a pure function of rid and position), so "outputs identical
+to running alone" reduces to an exact-sequence check however the trace is
+admitted, preempted, and requeued:
+
+  * every submitted request completes,
+  * FCFS: each admission picks the oldest waiting request,
+  * no starvation: the oldest running request is never the preemption
+    victim, and bounded preemptions under heavy pool pressure,
+  * page conservation: the pool is clean after the trace drains.
+
+Layer 2 — the real PagedEngine on the tiny reduced qwen3 (greedy): a
+pool sized to force preemption must reproduce, token for token, each
+request's solo run on the contiguous BatchedServer; shared-prefix
+admission increfs instead of recomputing and frees at refcount zero.
+
+Plus the prompt-truncation pin: BatchedServer.try_admit and
+Scheduler.submit must REJECT oversized prompts loudly (the old behavior
+silently dropped tokens past max_len-1)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import (BlockTables, PagePool, PoolExhausted, Request,
+                         Scheduler, pages_needed)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: the fake engine
+# ---------------------------------------------------------------------------
+
+class FakeEngine:
+    """Implements the engine protocol over a real PagePool/BlockTables, with
+    a deterministic token stream per request: token j of request r is
+    ``(r.rid * 1009 + j) % 65521`` — what the request would produce running
+    alone, so any co-tenancy leak shows up as a wrong sequence."""
+
+    def __init__(self, *, slots=3, num_pages=12, page_size=4, max_len=64,
+                 decode_block=4):
+        self.slots = slots
+        self.page_size = page_size
+        self.max_len = max_len
+        self.decode_block = decode_block
+        self.pool = PagePool(num_pages, page_size)
+        self.pool_capacity = self.pool.capacity
+        self.bt = BlockTables(slots, pages_needed(max_len, page_size))
+        self.state: dict[int, list] = {}  # slot -> [req, written, emitted]
+        self.admit_log: list[int] = []
+        self.preempt_log: list[int] = []
+
+    @staticmethod
+    def tok(req: Request, j: int) -> int:
+        return (req.rid * 1009 + j) % 65521
+
+    @staticmethod
+    def expected(req: Request) -> list[int]:
+        return [FakeEngine.tok(req, j) for j in range(req.gen)]
+
+    def admit(self, slot, req):
+        assert slot not in self.state
+        pages = self.pool.alloc(pages_needed(len(req.prompt),
+                                             self.page_size))
+        self.bt.append(slot, pages)
+        self.state[slot] = [req, len(req.prompt), 1]
+        self.admit_log.append(req.rid)
+        return self.tok(req, 0)
+
+    def decode(self, slots):
+        slots = [s for s in slots if s in self.state]
+        if not slots:
+            return {}
+        n = max(1, min([self.decode_block]
+                       + [st[0].gen - st[2] for st in
+                          (self.state[s] for s in slots)]))
+        for s in slots:             # grow BEFORE emitting, like the engine
+            req, written, _ = self.state[s]
+            need = pages_needed(written + n, self.page_size) \
+                - self.bt.num_pages(s)
+            if need > 0:
+                self.bt.append(s, self.pool.alloc(need))
+        out = {}
+        for s in slots:
+            st = self.state[s]
+            out[s] = [self.tok(st[0], st[2] + k) for k in range(n)]
+            st[1] += n
+            st[2] += n
+        return out
+
+    def _drop(self, slot):
+        self.pool.release(self.bt.drop(slot))
+        del self.state[slot]
+
+    def finish(self, slot):
+        self._drop(slot)
+
+    def preempt(self, slot):
+        self.preempt_log.append(self.state[slot][0].rid)
+        self._drop(slot)
+
+
+def _trace(rng, n, max_len=64, min_gen=1, max_gen=24):
+    out = []
+    for _ in range(n):
+        gen = int(rng.integers(min_gen, max_gen + 1))
+        plen = int(rng.integers(1, max_len - gen))
+        out.append(([int(t) for t in rng.integers(1, 1000, plen)], gen))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_every_request_completes_with_exact_solo_outputs(seed):
+    """Mixed-length random traces through a small pool: all complete, each
+    with exactly the token stream it would produce running alone."""
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(slots=3, num_pages=int(rng.integers(12, 24)),
+                     page_size=4, max_len=40)
+    sched = Scheduler(eng)
+    reqs = [sched.submit(p, g) for p, g in _trace(rng, 12, max_len=40)]
+    done = sched.run_until_done()
+    assert len(done) == len(reqs)
+    for req in done:
+        assert req.output == FakeEngine.expected(req), req.rid
+    assert eng.pool.num_live == 0
+    assert eng.pool.num_free == eng.pool.capacity
+    eng.pool.check()
+
+
+def test_fcfs_admission_order():
+    """Without preemption pressure, requests are admitted strictly in
+    arrival order even when slots free up out of order."""
+    eng = FakeEngine(slots=2, num_pages=64, page_size=4)
+    sched = Scheduler(eng)
+    rng = np.random.default_rng(1)
+    for p, g in _trace(rng, 8):
+        sched.submit(p, g)
+    sched.run_until_done()
+    assert eng.admit_log == sorted(eng.admit_log)
+    assert not eng.preempt_log
+
+
+def test_oldest_running_request_is_never_the_victim():
+    """Heavy pool pressure: preemptions happen, but each victim is the
+    youngest running request at that moment — the no-starvation induction."""
+    eng = FakeEngine(slots=3, num_pages=10, page_size=4, decode_block=4)
+
+    victims_vs_running = []
+    orig = Scheduler._preempt_youngest
+
+    def spy(self):
+        running = sorted(r.key for r in self.running.values())
+        orig(self)
+        victims_vs_running.append(
+            (eng.preempt_log[-1], [k[1] for k in running]))
+
+    Scheduler._preempt_youngest = spy
+    try:
+        sched = Scheduler(eng)
+        rng = np.random.default_rng(2)
+        for p, g in _trace(rng, 10, max_len=32, min_gen=8, max_gen=20):
+            sched.submit(p, g)
+        done = sched.run_until_done()
+    finally:
+        Scheduler._preempt_youngest = orig
+    assert eng.preempt_log, "scenario failed to force preemption"
+    for victim, running_rids in victims_vs_running:
+        assert victim == max(running_rids), \
+            f"preempted {victim}, running {running_rids}"
+    for req in done:
+        assert req.output == FakeEngine.expected(req)
+    assert eng.pool.num_live == 0
+
+
+def test_preempted_request_restarts_clean_and_completes():
+    eng = FakeEngine(slots=2, num_pages=8, page_size=4, decode_block=8)
+    sched = Scheduler(eng)
+    sched.submit([1] * 4, 16)
+    sched.submit([2] * 4, 16)
+    done = sched.run_until_done()
+    assert sum(r.preemptions for r in done) > 0
+    for req in done:
+        assert req.output == FakeEngine.expected(req)
+        assert len(req.output) == req.gen
+
+
+def test_submit_rejects_request_that_could_never_fit():
+    eng = FakeEngine(slots=2, num_pages=4, page_size=2, max_len=64)
+    sched = Scheduler(eng)
+    with pytest.raises(ValueError, match="even running alone"):
+        sched.submit([1] * 20, 10)      # 15 pages vs capacity 3
+
+
+def test_submit_rejects_oversized_prompt_instead_of_truncating():
+    """The truncation pin (scheduler side): prompt+gen past max_len is an
+    explicit error, not a silent drop of prompt tokens."""
+    eng = FakeEngine(slots=2, num_pages=64, page_size=4, max_len=32)
+    sched = Scheduler(eng)
+    with pytest.raises(ValueError, match="rejecting instead of truncating"):
+        sched.submit([1] * 30, 8)
+    sched.submit([1] * 24, 8)           # exactly max_len fits
+
+
+def test_gen_one_request_finishes_at_admission():
+    eng = FakeEngine(slots=1, num_pages=8, page_size=4)
+    sched = Scheduler(eng)
+    sched.submit([5, 6, 7], 1)
+    done = sched.run_until_done()
+    assert done[0].output == [FakeEngine.tok(done[0], 0)]
+    assert eng.pool.num_live == 0
+
+
+# ---------------------------------------------------------------------------
+# layer 2: the real PagedEngine (greedy determinism + shared prefixes)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo(cfg, params, prompt, gen, max_len=32):
+    from repro.launch.serve import BatchedServer
+    srv = BatchedServer(cfg, params, slots=1, max_len=max_len, chunk=8,
+                        decode_block=4)
+    assert srv.try_admit(list(prompt), gen)
+    while srv.any_active:
+        srv.step()
+    return srv.completed[0][:gen]
+
+
+def test_paged_engine_matches_solo_contiguous_under_preemption(tiny_model):
+    """The acceptance gate: short prompts + long generations through a pool
+    small enough to force preemption — every request's greedy output equals
+    its solo run on the CONTIGUOUS server (cross-layout oracle)."""
+    from repro.serve import PagedEngine
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, 6)))
+               for _ in range(3)]
+    gen = 18
+    solo = [_solo(cfg, params, p, gen) for p in prompts]
+    eng = PagedEngine(cfg, params, slots=3, num_pages=8, page_size=8,
+                      max_len=32, chunk=8, decode_block=4)
+    sched = Scheduler(eng)
+    for p in prompts:
+        sched.submit(p, gen)
+    done = sched.run_until_done()
+    assert sum(r.preemptions for r in done) > 0, \
+        "pool failed to force preemption — weaken num_pages"
+    for req, want in zip(done, solo):
+        assert req.output == want, req.rid
+    assert eng.pool.num_live == 0 and not eng.active.any()
+    eng.pool.check()
+
+
+def test_shared_prefix_refcount_lifecycle(tiny_model):
+    """Registered prefix pages are increfed per admit (never recomputed or
+    leaked), survive their tenants, and free exactly at drop_prefix."""
+    from repro.serve import PagedEngine
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    prefix = list(map(int, rng.integers(1, cfg.vocab, 16)))
+    tail = list(map(int, rng.integers(1, cfg.vocab, 5)))
+    eng = PagedEngine(cfg, params, slots=2, num_pages=16, page_size=8,
+                      max_len=48, chunk=8, decode_block=4)
+    reg = eng.register_prefix("sys", prefix)
+    assert reg == 16                       # page-aligned registration
+    pages = eng.prefixes["sys"].pages
+    assert all(eng.pool.refcount[p] == 1 for p in pages)
+    free0 = eng.pool.num_free
+
+    solo = _solo(cfg, params, prefix + tail, 6, max_len=48)
+    sched = Scheduler(eng)
+    sched.submit(prefix + tail, 6, prefix="sys")
+    sched.submit(prefix + tail[:2], 4, prefix="sys")
+    # while admitted, shared pages carry registry + tenant refs
+    sched._admit_waiting()
+    assert all(eng.pool.refcount[p] >= 2 for p in pages)
+    done = sched.run_until_done()
+    assert done[0].output == solo          # prefix reuse is exact
+    assert eng.pool.num_free == free0      # tenants released, registry holds
+    assert all(eng.pool.refcount[p] == 1 for p in pages)
+    eng.drop_prefix("sys")
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+def test_batched_server_rejects_long_prompt_instead_of_truncating(tiny_model):
+    """The launch/serve.py pin: the contiguous server must raise on a
+    prompt that exceeds its cache rather than silently dropping tokens."""
+    from repro.launch.serve import BatchedServer
+    cfg, params = tiny_model
+    srv = BatchedServer(cfg, params, slots=1, max_len=16, chunk=8)
+    with pytest.raises(ValueError, match="rejecting instead of truncating"):
+        srv.try_admit(list(range(1, 18)), 4)
+    assert not srv.any_active
+    assert srv.try_admit(list(range(1, 16)), 1)   # max_len-1 still admits
