@@ -22,6 +22,10 @@ Tables (one per paper figure):
   paging — paged-KV serving: admitted tokens at a fixed HBM budget vs the
            contiguous per-slot cache (heterogeneous trace), block-table
            paged decode kernel cost, end-to-end scheduler tok/s
+  specdecode — speculative decoding: per-family winning degrees at one
+           geometry (decode vs verify vs prefill), short-q verify kernel
+           cost across draft depths, end-to-end SpecPagedEngine parity +
+           acceptance under forced rejections and a self-draft
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -37,7 +41,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
                         roofline, tuned, decode, moe, attention, quant,
-                        paging)
+                        paging, specdecode)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -54,6 +58,7 @@ TABLES = {
     "attention": attention.main,
     "quant": quant.main,
     "paging": paging.main,
+    "specdecode": specdecode.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

@@ -477,6 +477,86 @@ def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
     )
 
 
+def flash_attention_verify_cost(b: int, h: int, hkv: int, t: int, s: int,
+                                d: int, cfg: CoarseningConfig, *,
+                                bkv: int = 128, kv_len: int | None = None,
+                                dtype_bytes: int = 2,
+                                kv_bits: int | None = None,
+                                page_size: int | None = None,
+                                dense: bool = False) -> KernelCost:
+    """Batched-verify attention (T drafted query rows vs a long cache) —
+    the speculative-decode geometry, coarsened on the kv-block/page axis
+    like `decode_attention_cost`.
+
+    The verify geometry sits BETWEEN decode and prefill, and its economics
+    differ from both ends:
+
+      * vs decode (t=1): every fetched cache pane is scored against T*G
+        query rows instead of G, so compute per pane grows ~T x while the
+        pane traffic is unchanged — the per-pane descriptor/table-lookup
+        overhead that dominates decode is amortized over T x more work, and
+        the per-program Q pane + the (T*G)-row combine partials become
+        first-class traffic terms that decode's model ignores as noise.
+      * vs prefill (t=s): the q side is far too short to feed the MXU
+        (T*G << 128 rows), so the q-row-block coarsening axis that
+        `flash_attention_cost` sweeps does not exist — the kv axis is the
+        only work-item axis, walked once per program rather than once per
+        q block.
+
+    Both shifts move the memory/compute crossover, so the winning degree
+    differs from both neighboring families (pinned in tests/test_tune.py).
+
+    dense=True models the unfused XLA einsum baseline: full allocated-length
+    scan + f32 HBM round-trips for the (H, T, S) logits and probabilities.
+    """
+    g = h // hkv
+    c = 1 if dense else cfg.degree
+    kv = s if (dense or kv_len is None) \
+        else min(s, max(c * bkv, -(-kv_len // (c * bkv)) * c * bkv))
+    n_splits = max(1, kv // (c * bkv))
+    grid = b * hkv * n_splits
+
+    descs = c if (not dense and (page_size is not None
+                                 or cfg.kind == KIND_GAPPED)) else 1
+    kvb = _wbytes(dtype_bytes, None if dense else kv_bits)
+    bytes_per_desc = c * bkv * (d * kvb + (4.0 if kv_bits and not dense
+                                           else 0.0)) / descs
+    dma_s = 2 * _dma_time(bytes_per_desc, descs)          # K + V panes
+    if page_size is not None and not dense:
+        dma_s += descs * HBM_LATENCY_S                    # table lookups
+    # T*G query rows against each fused pane: qk + pv + per-row softmax
+    flops = 4.0 * t * g * c * bkv * d + 6.0 * t * g * c * bkv
+    if kv_bits and not dense:
+        flops += 2 * c * bkv * d * DEQUANT_OPS[kv_bits]
+    compute_s = flops / VPU_FLOPS_F32
+
+    step = max(dma_s, compute_s)
+    total = (dma_s + compute_s) + step * max(0, grid - 1)
+
+    # the (T*G, D) q pane rides into EVERY program (decode treats its G-row
+    # pane as noise; at T rows it is real per-program traffic)
+    q_bytes = t * g * d * 4.0
+    total += grid * _dma_time(q_bytes, 1) if not dense else 0.0
+
+    if dense:
+        logit_bytes = 2.0 * b * h * t * kv * 4
+        total += 2 * _dma_time(logit_bytes, 2)
+    else:
+        # combine pass: per-split (m, l, acc) partials over T*G rows
+        part_bytes = b * hkv * t * g * n_splits * (2 + d) * 4
+        total += 2 * _dma_time(part_bytes, 2)
+
+    vmem = 2 * (2 * c * bkv * d * dtype_bytes + t * g * d * 4
+                + t * g * (2 + d) * 4)
+    return KernelCost(
+        label="dense" if dense else cfg.label, grid=grid,
+        dmas_per_step=2 * descs + 1, dma_bytes=bytes_per_desc,
+        vmem_bytes=vmem, dma_sems=2 * descs + 1,
+        dma_s_per_step=dma_s, compute_s_per_step=compute_s, modeled_s=total,
+        bound="memory" if dma_s >= compute_s else "compute",
+    )
+
+
 def moe_ffn_cost(e: int, cap: int, d: int, f: int, cfg: CoarseningConfig, *,
                  dtype_bytes: int = 2, wbits: int | None = None,
                  group: int = 32, dense: bool = False) -> KernelCost:

@@ -375,3 +375,179 @@ def make_paged_kernel(b: int, h: int, hkv: int, n_pages: int, npp: int,
             return out.reshape(b, 1, h, d).astype(q.dtype)
 
     return run
+
+
+def make_verify_kernel(b: int, h: int, hkv: int, t: int, n_pages: int,
+                       npp: int, d: int, cfg: CoarseningConfig, *,
+                       page_size: int = 64, window: int | None = None,
+                       scale: float | None = None,
+                       kv_bits: int | None = None,
+                       interpret: bool = True) -> Callable:
+    """Batched-verify attention through a per-slot block table (short-q
+    flash: the speculative-decode geometry).
+
+    Structurally this is `make_paged_kernel` generalized from one query row
+    to T drafted rows per slot: the coarsening axis is still the slot's
+    LOGICAL-PAGE axis (each program owns C table-resolved page loads), but
+    every fused page is now scored against a (T*G, D) q pane — row t of
+    slot b sits at cache position ``pos0[b] + t`` and carries its own
+    causal/window mask.  That changes the economics the tuner sees: decode
+    (t=1) amortizes the per-page issue + table-lookup latency over G query
+    rows, verify amortizes it over T*G rows, so the memory/compute
+    crossover — and the winning degree — moves (the
+    ``flash_attention_verify`` tuner family).
+
+    Returned callable:
+      run(q (B,T,H,D), k_pool, v_pool (P,ps,Hkv,D), block_table (B,npp)
+          int32, pos0 (B,) int32) -> (B,T,H,D)
+    ``kv_bits=8``: int8 pools + (P,ps,Hkv) f32 scale pools, callable takes
+    (q, k_pool, v_pool, k_scale, v_scale, block_table, pos0).
+    """
+    c = cfg.degree
+    ps = page_size
+    if npp % c:
+        raise ValueError(f"slot pages {npp} not tileable by degree {c}")
+    gapped = cfg.kind == KIND_GAPPED
+    g = h // hkv
+    if g * hkv != h:
+        raise ValueError(f"n_heads {h} not divisible by n_kv_heads {hkv}")
+    n_splits = npp // c
+    seg = npp // c                       # gapped logical-page stride
+    rows = t * g                         # fused q rows per program
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kv_bits not in (None, 8):
+        raise ValueError(f"kv_bits must be None or 8, got {kv_bits}")
+    quant = kv_bits == 8
+
+    def logical_page(si, j):
+        return (j * seg + si) if gapped else (si * c + j)
+
+    def body(pos_ref, bt_ref, q_ref, k_ref, v_ref, *refs):
+        if quant:
+            ks_ref, vs_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            m_ref, l_ref, acc_ref = refs
+        si = pl.program_id(2)
+        pos0 = pos_ref[0, 0]
+
+        if gapped:
+            first_row = si * ps
+            last_row = ((c - 1) * seg + si) * ps + ps - 1
+        else:
+            first_row = si * c * ps
+            last_row = (si * c + c - 1) * ps + ps - 1
+        # the deepest drafted row (pos0 + t - 1) reaches furthest right; the
+        # shallowest (pos0) bounds the window skip on the left
+        live = first_row <= pos0 + (t - 1)
+        if window is not None:
+            live &= last_row > pos0 - window
+
+        @pl.when(live)
+        def _compute():
+            q = q_ref[...].reshape(rows, d).astype(jnp.float32)
+            m = jnp.full((rows,), NEG, jnp.float32)
+            l = jnp.zeros((rows,), jnp.float32)
+            acc = jnp.zeros((rows, d), jnp.float32)
+            cols0 = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+            # per-draft-row cache positions: row (ti, gi) sits at pos0 + ti
+            tpos = pos0 + jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)
+            for j in range(c):       # unrolled: C table-resolved page loads
+                lp = logical_page(si, j)
+                pp = bt_ref[0, lp]   # physical page (the table gather)
+                kj = pl.load(k_ref, (pl.dslice(pp, 1), slice(None),
+                                     slice(None), slice(None))
+                             ).reshape(ps, d).astype(jnp.float32)
+                vj = pl.load(v_ref, (pl.dslice(pp, 1), slice(None),
+                                     slice(None), slice(None))
+                             ).reshape(ps, d).astype(jnp.float32)
+                if quant:
+                    kj = kj * pl.load(
+                        ks_ref, (pl.dslice(pp, 1), slice(None), slice(None))
+                    ).reshape(ps, 1)
+                    vj = vj * pl.load(
+                        vs_ref, (pl.dslice(pp, 1), slice(None), slice(None))
+                    ).reshape(ps, 1)
+                cols = cols0 + lp * ps                     # (1, ps)
+                maskt = cols <= tpos                       # (t, ps)
+                if window is not None:
+                    maskt &= cols > tpos - window
+                mask = jnp.broadcast_to(maskt[:, None, :],
+                                        (t, g, ps)).reshape(rows, ps)
+                sij = jnp.dot(q, kj.T,
+                              preferred_element_type=jnp.float32) * scale
+                sij = jnp.where(mask, sij, NEG)
+                m_new = jnp.maximum(m, sij.max(axis=1))
+                p = jnp.exp(sij - m_new[:, None]) * mask
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + p.sum(axis=1)
+                acc = acc * alpha[:, None] + jnp.dot(
+                    p, vj, preferred_element_type=jnp.float32)
+                m = m_new
+            m_ref[...] = m.reshape(m_ref.shape)
+            l_ref[...] = l.reshape(l_ref.shape)
+            acc_ref[...] = acc.reshape(acc_ref.shape)
+
+        @pl.when(jnp.logical_not(live))
+        def _dead():
+            m_ref[...] = jnp.full_like(m_ref, NEG)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pool_spec = pl.BlockSpec((n_pages, ps, 1, d),
+                             lambda bb, hh, si: (0, 0, hh, 0))
+    sc_pool_spec = pl.BlockSpec((n_pages, ps, 1),
+                                lambda bb, hh, si: (0, 0, hh))
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bb, hh, si: (bb, 0)),          # pos0
+        pl.BlockSpec((1, npp), lambda bb, hh, si: (bb, 0)),        # table
+        pl.BlockSpec((1, 1, rows, d), lambda bb, hh, si: (bb, hh, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    if quant:
+        in_specs += [sc_pool_spec, sc_pool_spec]
+
+    call = pl.pallas_call(
+        body,
+        grid=(b, hkv, n_splits),
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((1, 1, rows, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, rows, 1), lambda bb, hh, si: (bb, hh, 0, si)),
+            pl.BlockSpec((1, 1, rows, 1, d),
+                         lambda bb, hh, si: (bb, hh, 0, si, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hkv, rows, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rows, n_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, rows, n_splits, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )
+
+    def _qview(q):
+        # (B,T,H,D) -> (B,Hkv,T*G,D), rows (ti, gi) flattened t-major so the
+        # per-page mask broadcast above lines up
+        return q.reshape(b, t, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+                .reshape(b, hkv, rows, d)
+
+    def _oview(out, dtype):
+        # combined (B,Hkv,T*G,D) -> (B,T,H,D)
+        return out.reshape(b, hkv, t, g, d).transpose(0, 2, 1, 3, 4) \
+                  .reshape(b, t, h, d).astype(dtype)
+
+    if quant:
+        def run(q, k_pool, v_pool, k_scale, v_scale, block_table, pos0):
+            pos2 = pos0.reshape(b, 1).astype(jnp.int32)
+            bt = block_table.astype(jnp.int32)
+            m, l, acc = call(pos2, bt, _qview(q), k_pool, v_pool,
+                             k_scale, v_scale)
+            return _oview(_combine(m, l, acc), q.dtype)
+    else:
+        def run(q, k_pool, v_pool, block_table, pos0):
+            pos2 = pos0.reshape(b, 1).astype(jnp.int32)
+            bt = block_table.astype(jnp.int32)
+            m, l, acc = call(pos2, bt, _qview(q), k_pool, v_pool)
+            return _oview(_combine(m, l, acc), q.dtype)
+
+    return run

@@ -381,6 +381,67 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, pos,
 
 
 @functools.lru_cache(maxsize=256)
+def _verify_fn(b, h, hkv, t, n_pages, npp, d, cfg, page_size, window,
+               scale, backend, kv_bits=None):
+    if backend == "ref":
+        def run(q, k_pool, v_pool, bt, pos0):
+            # gather-to-contiguous oracle, same shape as the paged-decode
+            # ref path: resolve the table on the XLA side, then the dense
+            # per-row verify oracle
+            k = k_pool[bt].reshape(b, npp * page_size, hkv, d)
+            v = v_pool[bt].reshape(b, npp * page_size, hkv, d)
+            return ref.verify_attention(q, k, v, pos0, window=window,
+                                        scale=scale)
+        return jax.jit(run)
+    return jax.jit(_decode.make_verify_kernel(b, h, hkv, t, n_pages, npp, d,
+                                              cfg, page_size=page_size,
+                                              window=window, scale=scale,
+                                              kv_bits=kv_bits,
+                                              interpret=_interpret()))
+
+
+def flash_attention_verify(q, k_pool, v_pool, block_table, pos0,
+                           cfg: CoarseningConfig | str = BASE, *,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           backend: str = "pallas",
+                           k_scale=None, v_scale=None):
+    """Batched-verify attention through a per-slot block table (the
+    speculative-decode short-q flash geometry).
+
+    q: (B,T,H,D) — T drafted rows per slot, row t at cache position
+    ``pos0[b] + t``; pools: (P, page_size, Hkv, D); block_table: (B, npp)
+    int32; pos0: (B,) int32 -> (B,T,H,D).  The coarsening axis is the
+    LOGICAL-PAGE axis as in `paged_decode_attention`, but the tuner family
+    (``flash_attention_verify``) is distinct: scoring T*G rows per fetched
+    page moves the memory/compute crossover, so the winning degree differs
+    from both the decode and prefill families.
+
+    ``k_scale``/``v_scale`` (P, page_size, Hkv) select the int8 pool mode
+    (kv_bits=8 joins the tuner key)."""
+    b, t, h, d = q.shape
+    n_pages, page_size, hkv, _ = k_pool.shape
+    npp = block_table.shape[1]
+    quant = k_scale is not None
+    params = dict(page_size=page_size, window=window or 0)
+    if quant:
+        params["kv_bits"] = 8
+    cfg = resolve_cfg(cfg, "flash_attention_verify", (b, h, hkv, t, npp, d),
+                      dtype=k_pool.dtype.name, backend=backend, **params)
+    if backend == "ref" and quant:
+        from repro.quant.qtypes import dequantize_kv
+        k_pool = dequantize_kv(k_pool, k_scale)
+        v_pool = dequantize_kv(v_pool, v_scale)
+        quant = False
+    fn = _verify_fn(b, h, hkv, t, n_pages, npp, d, cfg, page_size,
+                    window, scale, backend,
+                    8 if quant and backend != "ref" else None)
+    if quant:
+        return fn(q, k_pool, v_pool, k_scale, v_scale, block_table, pos0)
+    return fn(q, k_pool, v_pool, block_table, pos0)
+
+
+@functools.lru_cache(maxsize=256)
 def _moe_ffn_fn(e, cap, d, f, cfg, backend):
     if backend == "ref":
         return jax.jit(ref.moe_ffn)

@@ -122,6 +122,37 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+# --- verify attention (speculative decode: short q vs a long cache) ----------
+
+def verify_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos0: jax.Array, *, window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Batched-verify oracle: T drafted rows against the full cache.
+
+    q: (B,T,H,D); caches: (B,S,Hkv,D); pos0: (B,) int32 — row t of slot b
+    sits at cache position ``pos0[b] + t`` and attends to every cache row at
+    or before it.  T==1 is exactly `decode_attention`; the math mirrors it
+    row for row (same einsum contraction, f32 accumulation, dense softmax)
+    so a verify pass over rows the decode path would have produced one at a
+    time is bitwise-identical to it on the ref backend."""
+    b, t, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, t, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bthgd,bshd->bthgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    rows = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]   # (B,T)
+    mask = kpos[None, None, :] <= rows[:, :, None]                   # (B,T,S)
+    if window is not None:
+        mask = mask & (kpos[None, None, :] > rows[:, :, None] - window)
+    logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bthgs,bshd->bthgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
 # --- grouped-expert MoE FFN ---------------------------------------------------
 
 def moe_ffn(xe: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,

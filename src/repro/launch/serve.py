@@ -24,6 +24,16 @@ refcounting.  The driver then runs as a streaming front-end — requests are
 submitted to the Scheduler, which admits/preempts/retires against the
 PagedEngine (examples/serve_batched.py is a client of the same API).
 
+``--spec-k K`` (paged only) turns on speculative decoding: a draft model
+(``--draft-config``: an arch name, ``self``, or the default `draft_of`
+shrink) proposes K tokens per slot per step and the target scores all K+1
+positions in one batched pass through the short-q coarsened verify kernel,
+accepting the longest matching prefix and rolling rejected pages back; the
+driver reports the acceptance rate next to tok/s.
+
+  PYTHONPATH=src python -m repro.launch.serve --cache paged --spec-k 4 \
+      --draft-config self --slots 3 --requests 6 --gen-tokens 24
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --slots 4 --requests 8 --prompt-len 32 --chunk 16 --gen-tokens 16 \
       --quant int8 --kv-quant int8
@@ -238,16 +248,34 @@ class BatchedServer:
 def _serve_paged(args, cfg, params, rng) -> None:
     """Streaming front-end over the paged engine: submit the request trace
     to the Scheduler and let it admit / preempt / retire against the pool."""
-    from repro.serve import PagedEngine, Scheduler
+    from repro.serve import PagedEngine, Scheduler, SpecPagedEngine, draft_of
 
     num_pages = args.num_pages if args.num_pages is not None else \
         args.slots * -(-args.max_len // args.page_size) + 1
-    engine = PagedEngine(cfg, params, slots=args.slots, num_pages=num_pages,
-                         page_size=args.page_size, max_len=args.max_len,
-                         chunk=args.chunk, decode_block=args.decode_block,
-                         tune=args.tune, decode_backend=args.decode_backend,
-                         moe_backend=args.moe_backend, quant=args.quant,
-                         kv_quant=args.kv_quant)
+    kw = dict(slots=args.slots, num_pages=num_pages,
+              page_size=args.page_size, max_len=args.max_len,
+              chunk=args.chunk, tune=args.tune,
+              decode_backend=args.decode_backend,
+              moe_backend=args.moe_backend, quant=args.quant,
+              kv_quant=args.kv_quant)
+    if args.spec_k:
+        if args.draft_config == "self":
+            draft_cfg, draft_params = cfg, params
+        elif args.draft_config:
+            draft_cfg = get_config(args.draft_config)
+            if args.reduced:
+                draft_cfg = draft_cfg.reduced()
+            draft_cfg = dataclasses.replace(draft_cfg, vocab=cfg.vocab)
+            draft_params = None        # fresh init at the draft geometry
+        else:
+            draft_cfg, draft_params = draft_of(cfg), None
+        engine = SpecPagedEngine(cfg, params, spec_k=args.spec_k,
+                                 draft_cfg=draft_cfg,
+                                 draft_params=draft_params,
+                                 rng=jax.random.PRNGKey(1), **kw)
+    else:
+        engine = PagedEngine(cfg, params, decode_block=args.decode_block,
+                             **kw)
     sched = Scheduler(engine)
     for _ in range(args.requests):
         sched.submit(list(rng.integers(1, cfg.vocab, args.prompt_len)),
@@ -269,6 +297,16 @@ def _serve_paged(args, cfg, params, rng) -> None:
     print(f"memory: weights {engine.weight_mib:.2f} MiB | paged kv pool "
           f"{engine.cache_mib:.2f} MiB "
           f"({engine.pool.tokens_capacity} pooled tokens)")
+    if args.spec_k:
+        print(f"speculative: K={args.spec_k} "
+              f"draft={args.draft_config or 'draft_of'} | "
+              f"acceptance {engine.acceptance_rate:.3f} "
+              f"({engine.accepted}/{max(engine.drafted, 1)} drafts) | "
+              f"{engine.spec_steps} verify steps "
+              f"({engine.rescue_steps} tie-guard rescues) for "
+              f"{engine.decoded_tokens} tokens "
+              f"({engine.decoded_tokens / max(engine.spec_steps, 1):.2f} "
+              f"tok/step)")
     print("sample output:", done[0].output[:8])
 
 
@@ -314,7 +352,18 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged cache: pool pages incl. the null page "
                          "(default: slots*max_len/page_size + 1)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding (paged cache only): draft K "
+                         "tokens per slot per step and verify them in one "
+                         "batched short-q pass (0 = off)")
+    ap.add_argument("--draft-config", default=None,
+                    help="draft model for --spec-k: an arch name, 'self' "
+                         "(draft = target, the acceptance upper bound), or "
+                         "unset for the default draft_of() shrink")
     args = ap.parse_args()
+    if args.spec_k and args.cache != "paged":
+        ap.error("--spec-k needs --cache paged (the draft KV cache and "
+                 "verify rollback are built on the page pool)")
 
     cfg = get_config(args.arch)
     if args.reduced:

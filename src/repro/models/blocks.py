@@ -202,11 +202,18 @@ def _paged_rows(block_table, pos, page_size):
 
 
 def attn_block_decode_paged(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
-                            block_table, shard: ShardCtx = NOSHARD):
+                            block_table, write_mask=None,
+                            shard: ShardCtx = NOSHARD):
     """Paged twin of attn_block_decode: the new row scatters through the
     block table into the shared pool and attention reads the pool through
     the same table.  cache: {'k','v'[,'k_scale','v_scale']} pools
-    (P,ps,kv,hd); block_table: (B, npp) int32; pos: (B,)."""
+    (P,ps,kv,hd); block_table: (B, npp) int32; pos: (B,).
+
+    ``write_mask`` (B,) bool suppresses a slot's cache write (the
+    speculative draft scan pads every slot to the batch-max draft length;
+    padded steps run at positions past the slot's page coverage, where the
+    table lookup CLAMPS and would alias a live page — so the page is routed
+    to NULL before the scatter)."""
     window = cfg.window if kind == ATTN_LOCAL else None
     ps = cache["k"].shape[1]
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -214,6 +221,8 @@ def attn_block_decode_paged(p, x, cfg: ModelConfig, cache, *, kind: str, pos,
     quant = "k_scale" in cache
     k_upd, v_upd = jax.lax.optimization_barrier((k[:, 0], v[:, 0]))
     page, row = _paged_rows(block_table, pos, ps)
+    if write_mask is not None:
+        page = jnp.where(write_mask, page, 0)       # 0 == NULL_PAGE
     kscale = vscale = None
     if quant:
         from repro.quant.qtypes import quantize_kv
@@ -289,6 +298,63 @@ def attn_block_prefill_paged(p, x, cfg: ModelConfig, cache, *, kind: str,
     else:
         y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
     return x + y, {"k": kc, "v": vc, **newc}
+
+
+def attn_block_verify_paged(p, x, cfg: ModelConfig, cache, *, kind: str,
+                            pos0, block_table, valid_len=None,
+                            shard: ShardCtx = NOSHARD):
+    """Batched-verify twin of attn_block_decode_paged (speculative decode):
+    T drafted rows per slot scatter through the block table at positions
+    ``pos0[b] + t`` and attention scores all of them in one short-q pass
+    (L.verify_attention — the flash_attention_verify tuner family).
+
+    ``valid_len`` (B,) int32 marks rows ``t >= valid_len[b]`` as batch
+    padding.  Their writes MUST be suppressed: JAX clamps out-of-bounds
+    gathers, so a padded row past the slot's page coverage would resolve
+    the table lookup to a LIVE page and the scatter would corrupt it —
+    route the page to NULL before the scatter instead (scatters to row 0
+    of the null page are harmless by construction)."""
+    b, t, _ = x.shape
+    ps = cache["k"].shape[1]
+    window = cfg.window if kind == ATTN_LOCAL else None
+    pos = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None]     # (B,T)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, pos)
+    page, row = _paged_rows(block_table, pos, ps)
+    if valid_len is not None:
+        live = jnp.arange(t, dtype=jnp.int32)[None] < valid_len[:, None]
+        page = jnp.where(live, page, 0)             # 0 == NULL_PAGE
+    quant = "k_scale" in cache
+    kscale = vscale = None
+    if quant:
+        from repro.quant.qtypes import quantize_kv
+        kq, ks_new = quantize_kv(k.astype(jnp.float32))
+        vq, vs_new = quantize_kv(v.astype(jnp.float32))
+        k_upd, v_upd = jax.lax.optimization_barrier((kq, vq))
+        kscale = cache["k_scale"].at[page, row].set(ks_new)
+        vscale = cache["v_scale"].at[page, row].set(vs_new)
+    else:
+        k_upd, v_upd = jax.lax.optimization_barrier(
+            (k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)))
+    kc = cache["k"].at[page, row].set(k_upd)
+    vc = cache["v"].at[page, row].set(v_upd)
+    o = L.verify_attention(q, kc, vc, block_table, pos0, window=window,
+                           backend=cfg.decode_backend,
+                           cfg=cfg.decode_attn_cfg,
+                           k_scale=kscale, v_scale=vscale)
+    o = o.reshape(b, t, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
+    x = x + o
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        # full capacity, as in chunked prefill: verify never drops on
+        # routing overflow
+        y, _ = L.moe(p["moe"], h, cfg, shard=shard, capacity=b * t)
+    else:
+        y = L.ffn(p["ffn"], h, backend=cfg.ffn_backend)
+    newc = {"k": kc, "v": vc}
+    if quant:
+        newc.update(k_scale=kscale, v_scale=vscale)
+    return x + y, newc
 
 
 # ---------------------------------------------------------------------------

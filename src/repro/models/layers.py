@@ -448,6 +448,66 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
                             k_scale=ks, v_scale=vs)
 
 
+def verify_attention(q, k_pool, v_pool, block_table, pos0, *, window=None,
+                     scale=None, backend: str = "ref", cfg="auto",
+                     k_scale=None, v_scale=None):
+    """Batched-verify attention against a PAGED cache (speculative decode).
+    q: (B,T,H,D) — row t attends at cache position ``pos0[b] + t``; pools /
+    block_table / scales as in `paged_decode_attention`; pos0: (B,).
+
+    backend="pallas" dispatches the short-q block-table kernel
+    (kernels/decode_attention.make_verify_kernel, tuned under the
+    "flash_attention_verify" family — its own cache key: scoring T*G rows
+    per fetched page moves the winning degree away from the decode
+    family's).  The fallback gathers the table into a contiguous view and
+    runs the decode dense contraction with one extra row axis — each row is
+    the exact computation `decode_attention`'s fallback would do at that
+    position, which is what makes greedy verify bitwise-exact against
+    sequential decode on the ref backend.
+    """
+    b, t, h, d = q.shape
+    n_pages, ps, hkv, _ = k_pool.shape
+    npp = block_table.shape[1]
+    if backend == "pallas" and h % hkv == 0:
+        from repro.kernels import ops
+        params = dict(page_size=ps, window=window or 0)
+        if k_scale is not None:
+            params["kv_bits"] = 8
+        rcfg = ops.resolve_cfg(cfg, "flash_attention_verify",
+                               (b, h, hkv, t, npp, d),
+                               dtype=k_pool.dtype.name,
+                               backend="pallas", **params)
+        # an explicit degree the per-slot page count can't tile falls back
+        if npp % rcfg.degree == 0:
+            return ops.flash_attention_verify(
+                q, k_pool, v_pool, block_table, pos0, rcfg, window=window,
+                scale=scale, k_scale=k_scale, v_scale=v_scale)
+    # gather-to-contiguous fallback (and the verify kernel's parity oracle)
+    bt = block_table.astype(jnp.int32)
+    k_view = k_pool[bt].reshape(b, npp * ps, hkv, d)
+    v_view = v_pool[bt].reshape(b, npp * ps, hkv, d)
+    if k_scale is not None:
+        k_view = dequantize_kv(k_view, k_scale[bt].reshape(b, npp * ps, hkv))
+        v_view = dequantize_kv(v_view, v_scale[bt].reshape(b, npp * ps, hkv))
+    s = npp * ps
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = (q.reshape(b, t, hkv, g, d) * jnp.asarray(scale, q.dtype)
+          ).astype(k_view.dtype)
+    logits = jnp.einsum("bthgd,bshd->bthgs", qg, k_view,
+                        preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    rows = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B,T)
+    mask = kpos[None, None, :] <= rows[:, :, None]                  # (B,T,S)
+    if window is not None:
+        mask = mask & (kpos[None, None, :] > rows[:, :, None] - window)
+    logits = jnp.where(mask[:, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bthgs,bshd->bthgd", p.astype(v_view.dtype), v_view,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # attention block params
 # --------------------------------------------------------------------------

@@ -58,12 +58,13 @@ def _block_apply(kind: str, p, x, cfg, *, pos, mrope_pos3, shard, moe_capacity,
 
 
 def _block_decode(kind: str, p, x, cfg, cache, *, pos, shard,
-                  block_table=None):
+                  block_table=None, write_mask=None):
     if kind in (ATTN_GLOBAL, ATTN_LOCAL):
         if block_table is not None:
             return B.attn_block_decode_paged(p, x, cfg, cache, kind=kind,
                                              pos=pos,
                                              block_table=block_table,
+                                             write_mask=write_mask,
                                              shard=shard)
         return B.attn_block_decode(p, x, cfg, cache, kind=kind, pos=pos,
                                    shard=shard)
@@ -72,6 +73,19 @@ def _block_decode(kind: str, p, x, cfg, cache, *, pos, shard,
     if kind == SSM:
         return B.mamba_block_decode(p, x, cfg, cache, pos=pos)
     raise ValueError(kind)
+
+
+def _block_verify(kind: str, p, x, cfg, cache, *, pos0, block_table,
+                  valid_len, shard):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return B.attn_block_verify_paged(p, x, cfg, cache, kind=kind,
+                                         pos0=pos0, block_table=block_table,
+                                         valid_len=valid_len, shard=shard)
+    # recurrent/SSM state is a running summary — rejected drafted tokens
+    # cannot be rolled out of it, so speculative decoding is attention-only
+    raise NotImplementedError(
+        f"lm_verify_step: {kind!r} layers carry unrewindable state; "
+        f"speculative decoding supports attention-only stacks")
 
 
 def _block_cache(kind: str, cfg, b, s_max, dtype):
@@ -382,12 +396,15 @@ def lm_init_cache_paged(cfg: ModelConfig, b: int, num_pages: int,
 
 
 def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
-                   shard: ShardCtx = NOSHARD, block_table=None):
+                   shard: ShardCtx = NOSHARD, block_table=None,
+                   write_mask=None):
     """tokens: (B,1) int32; pos: (B,) int32 -> (logits (B,V), new cache).
 
     ``block_table`` (B, npp) int32 switches the attention layers to the
     PAGED cache layout (pool leaves + table-routed scatters; see
-    lm_init_cache_paged) — non-attention state is unaffected."""
+    lm_init_cache_paged) — non-attention state is unaffected.
+    ``write_mask`` (B,) bool (paged only) suppresses a slot's cache write
+    — the speculative draft scan's padding guard."""
     period, n_periods, tail = _period(cfg)
     x = _embed(params, tokens, cfg, {"tokens": tokens})
 
@@ -409,7 +426,8 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
             else:
                 x, nc = _block_decode(kind, pblk[j], x, cfg, cblk[j],
                                       pos=pos, shard=shard,
-                                      block_table=block_table)
+                                      block_table=block_table,
+                                      write_mask=write_mask)
             newc.append(nc)
         caches = [jax.tree.map(
             lambda a, u: lax.dynamic_update_index_in_dim(a, u, i, 0), c, nc)
@@ -422,12 +440,66 @@ def lm_decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     new_tail = []
     for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
         x, nc = _block_decode(kind, p_t, x, cfg, c_t, pos=pos, shard=shard,
-                              block_table=block_table)
+                              block_table=block_table, write_mask=write_mask)
         new_tail.append(nc)
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = (x[:, 0] @ _head(params, cfg).astype(x.dtype)).astype(jnp.float32)
     logits = logits[:, : cfg.vocab]               # drop pad-vocab ids
+    return logits, {"blocks": list(new_blocks), "tail": new_tail}
+
+
+def lm_verify_step(params, cache, tokens, pos0, cfg: ModelConfig, *,
+                   block_table, valid_len=None, shard: ShardCtx = NOSHARD):
+    """Speculative-decode batched verify: score T drafted tokens per slot
+    in ONE pass.  tokens: (B,T) int32 — token t sits at cache position
+    ``pos0[b] + t``; block_table: (B, npp) int32 (paged cache only);
+    valid_len: optional (B,) int32 — rows ``t >= valid_len[b]`` are batch
+    padding (their cache writes are suppressed and their logits garbage).
+    Returns (logits (B,T,vocab) f32 — row t scores position pos0+t+1 — and
+    the new cache, with rows [pos0, pos0+T) appended).
+
+    Attention-only stacks: recurrent/SSM layers raise (their state cannot
+    be rewound past rejected rows).  Row t's logits equal what
+    `lm_decode_step` at pos0+t would produce given the same cache prefix —
+    the exactness property the greedy accept rule builds on.
+    """
+    period, n_periods, tail = _period(cfg)
+    if cfg.is_encdec:
+        raise NotImplementedError("lm_verify_step: enc-dec models are not "
+                                  "supported")
+    x = _embed(params, tokens, cfg, {"tokens": tokens})
+    kinds = period
+
+    def period_body(carry, pblk):
+        x, caches, i = carry
+        cblk = [jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), c)
+            for c in caches]
+        newc = []
+        for j, kind in enumerate(kinds):
+            x, nc = _block_verify(kind, pblk[j], x, cfg, cblk[j], pos0=pos0,
+                                  block_table=block_table,
+                                  valid_len=valid_len, shard=shard)
+            newc.append(nc)
+        caches = [jax.tree.map(
+            lambda a, u: lax.dynamic_update_index_in_dim(a, u, i, 0), c, nc)
+            for c, nc in zip(caches, newc)]
+        return (x, caches, i + 1), None
+
+    (x, new_blocks, _), _ = lax.scan(
+        period_body, (x, list(cache["blocks"]), jnp.asarray(0, jnp.int32)),
+        tuple(params["blocks"]))
+    new_tail = []
+    for p_t, c_t, kind in zip(params["tail"], cache["tail"], tail):
+        x, nc = _block_verify(kind, p_t, x, cfg, c_t, pos0=pos0,
+                              block_table=block_table, valid_len=valid_len,
+                              shard=shard)
+        new_tail.append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ _head(params, cfg).astype(x.dtype)).astype(jnp.float32)
+    logits = logits[:, :, : cfg.vocab]            # drop pad-vocab ids
     return logits, {"blocks": list(new_blocks), "tail": new_tail}
 
 

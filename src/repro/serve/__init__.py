@@ -7,11 +7,16 @@
 ``engine``     — PagedEngine: the model-coupled serving engine (paged cache,
                  chunked prefill through page allocation, on-device decode
                  blocks, preempt/resume).
+``spec``       — SpecPagedEngine: speculative decoding (draft-K proposals,
+                 one batched verify pass through the short-q coarsened
+                 kernel, paged rollback of rejected rows).
 """
 from repro.serve.engine import PagedEngine
 from repro.serve.paging import (NULL_PAGE, BlockTables, PagePool,
                                 PoolExhausted, pages_needed)
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.spec import SpecPagedEngine, draft_of
 
 __all__ = ["NULL_PAGE", "BlockTables", "PagePool", "PoolExhausted",
-           "PagedEngine", "pages_needed", "Request", "Scheduler"]
+           "PagedEngine", "SpecPagedEngine", "draft_of", "pages_needed",
+           "Request", "Scheduler"]

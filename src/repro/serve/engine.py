@@ -72,7 +72,8 @@ class PagedEngine:
                  chunk: int = 16, decode_block: int = 1,
                  tune: str | None = None, decode_backend: str | None = None,
                  moe_backend: str | None = None, quant: str | None = None,
-                 kv_quant: str | None = None):
+                 kv_quant: str | None = None,
+                 max_prefixes: int | None = None):
         if cfg.is_encdec:
             raise NotImplementedError("PagedEngine: enc-dec models are not "
                                       "supported")
@@ -108,7 +109,11 @@ class PagedEngine:
         self.written = np.zeros((slots,), np.int32)   # cache rows filled
         self.last = np.zeros((slots,), np.int32)      # last sampled token
         self.remaining = np.zeros((slots,), np.int32)  # gen tokens left
+        # LRU order: dict insertion order is recency (oldest first); a
+        # shared-prefix admit hit moves its record to the end
         self.prefixes: dict[str, PrefixRecord] = {}
+        self.max_prefixes = max_prefixes
+        self.prefix_evictions = 0
 
         self.prefill_steps = self.decode_steps = 0
         self.prefill_tokens = self.decoded_tokens = 0
@@ -226,6 +231,8 @@ class PagedEngine:
         if pre is not None and len(pre.tokens) <= len(prompt) - 1 \
                 and tuple(prompt[: len(pre.tokens)]) == pre.tokens:
             start, shared = len(pre.tokens), pre.pages
+            # LRU touch: a hit is a use — move to the recency tail
+            self.prefixes[req.prefix] = self.prefixes.pop(req.prefix)
         fresh = self.pool.alloc(pages_needed(len(prompt), self.page_size)
                                 - len(shared))   # raises, no side effects
         self.pool.incref(shared)
@@ -297,6 +304,33 @@ class PagedEngine:
             self.remaining[s] -= n
         return out
 
+    # -- admission accounting ------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return self.pool.num_free
+
+    def _step_rows(self) -> int:
+        """Worst-case cache rows one decode step appends per slot.  The
+        speculative engine overrides this (K+1 rows per verify step) and
+        exposes `step_growth_bound` to the scheduler's admission check."""
+        return self.decode_block
+
+    def _growth_bound(self, req=None) -> int:
+        """Worst-case pages the NEXT decode step may allocate across the
+        running slots — plus, when ``req`` is given, the pages admitting it
+        would take (prompt, counted un-shared) and its own first step's
+        growth."""
+        n, ps = self._step_rows(), self.page_size
+        total = 0
+        for s in range(self.slots):
+            if self.active[s]:
+                total += max(0, pages_needed(int(self.written[s]) + n, ps)
+                             - self.bt.num_pages(s))
+        if req is not None:
+            total += pages_needed(len(req.prompt) + n, ps)
+        return total
+
     def _drop(self, slot: int) -> None:
         self.pool.release(self.bt.drop(slot))
         self.active[slot] = False
@@ -314,10 +348,30 @@ class PagedEngine:
         """Prefill the page-aligned head of ``tokens`` once and pin its
         pages under ``name`` (refcount held by the registry); returns the
         number of tokens the record covers (0 = too short to share).
-        Needs a free slot to run the prefill in."""
+        Needs a free slot to run the prefill in.
+
+        With ``max_prefixes`` set, the registry is a bounded LRU: when full,
+        the least-recently-used prefix whose pages nobody else holds
+        (registry refcount only, i.e. every page at refcount 1) is evicted
+        first; in-use prefixes are never evicted, and a full registry of
+        in-use prefixes raises."""
         reg_len = (len(tokens) // self.page_size) * self.page_size
         if reg_len == 0:
             return 0
+        if name in self.prefixes:       # re-register: replace, don't leak
+            self.drop_prefix(name)
+        if self.max_prefixes is not None:
+            while len(self.prefixes) >= self.max_prefixes:
+                victim = next(
+                    (nm for nm, pre in self.prefixes.items()
+                     if all(self.pool.refcount[p] == 1 for p in pre.pages)),
+                    None)
+                if victim is None:
+                    raise RuntimeError(
+                        f"prefix registry full ({self.max_prefixes}) and "
+                        f"every prefix is referenced by a running slot")
+                self.drop_prefix(victim)
+                self.prefix_evictions += 1
         free = [s for s in range(self.slots) if not self.active[s]]
         if not free:
             raise RuntimeError("register_prefix needs a free slot")

@@ -159,6 +159,18 @@ class BlockTables:
         pages, self.tables[slot] = self.tables[slot], []
         return pages
 
+    def truncate(self, slot: int, n_keep: int) -> list[int]:
+        """Shrink a slot's table to its first ``n_keep`` pages and hand back
+        the dropped tail (the caller releases it against the pool) — the
+        speculative-decode rollback: rejected drafted positions' pages leave
+        the table front-to-back intact, so shared-prefix pages (always a
+        prefix of the table) are never touched."""
+        if n_keep < 0:
+            raise ValueError(f"truncate({slot}, {n_keep})")
+        t = self.tables[slot]
+        tail, self.tables[slot] = t[n_keep:], t[:n_keep]
+        return tail
+
     def num_pages(self, slot: int) -> int:
         return len(self.tables[slot])
 

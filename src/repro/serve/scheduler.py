@@ -105,8 +105,17 @@ class Scheduler:
         first admission failure (admitting younger over older would break
         arrival order)."""
         self.waiting.sort(key=lambda r: r.key)
+        bound = getattr(self.engine, "step_growth_bound", None)
         while self.waiting and (free := self._free_slots()):
             req, slot = self.waiting[0], free[0]
+            if bound is not None and self.running \
+                    and self.engine.free_pages < bound(req):
+                # admitting would leave the next decode step short of its
+                # worst-case page growth (speculative verify appends K+1
+                # rows at once) — hold the request until decode progress
+                # frees pages.  Skipped when nothing is running: a lone
+                # request must always make progress.
+                break
             try:
                 first = self.engine.admit(slot, req)
             except PoolExhausted:

@@ -27,7 +27,12 @@ from repro.core.coarsening import CoarseningConfig
 # models; the ops audit also started keying every family on the REAL array
 # dtype (ew/gather/stencil/scan/embed previously all filed under "float32"),
 # so v2 winners for those families sit under wrong keys.
-CACHE_VERSION = 3
+# v4: speculative decoding — the flash_attention_verify family (short-q
+# batched verify through the paged short-q kernel, spec shape
+# (b, h, hkv, t, npp, d)) plus its cost model in core/analysis; the verify
+# terms also sharpened the decode-vs-verify crossover decode winners were
+# modeled against, so v3 files reload as empty.
+CACHE_VERSION = 4
 ENV_VAR = "REPRO_TUNE_CACHE"
 
 

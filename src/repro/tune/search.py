@@ -190,6 +190,16 @@ def enumerate_candidates(spec: KernelSpec,
         for kind, deg in _kind_degree_pairs(degrees):
             if npp % deg == 0:
                 out.append(CoarseningConfig(kind, deg))
+    elif fam == "flash_attention_verify":
+        b, h, hkv, t, npp, d = spec.shape
+        # speculative-decode verify: T drafted q rows vs the paged cache.
+        # The coarsening axis is the slot's logical-page axis exactly as in
+        # decode_attention_paged (the q side is far too short for q-row
+        # blocking), so the degree must divide the per-slot page count.
+        # Replication and SIMD are not implemented -> excluded.
+        for kind, deg in _kind_degree_pairs(degrees):
+            if npp % deg == 0:
+                out.append(CoarseningConfig(kind, deg))
     elif fam == "moe_ffn":
         e, cap, d, f = spec.shape
         # expert-axis coarsening: each program owns `degree` whole experts,
@@ -314,6 +324,14 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
         ps = p.get("page_size", 64)
         return analysis.decode_attention_cost(
             b, h, hkv, npp * ps, d, cfg, bkv=ps,
+            kv_len=p.get("kv_len", None), dtype_bytes=dtb,
+            kv_bits=p.get("kv_bits"), page_size=ps).modeled_s
+
+    if fam == "flash_attention_verify":
+        b, h, hkv, t, npp, d = spec.shape
+        ps = p.get("page_size", 64)
+        return analysis.flash_attention_verify_cost(
+            b, h, hkv, t, npp * ps, d, cfg, bkv=ps,
             kv_len=p.get("kv_len", None), dtype_bytes=dtb,
             kv_bits=p.get("kv_bits"), page_size=ps).modeled_s
 

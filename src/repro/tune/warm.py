@@ -27,7 +27,8 @@ TUNE_CHOICES = ("auto", "model", "greedy", "exhaustive")
 
 def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
                    cache: Optional[TuningCache] = None,
-                   page_size: Optional[int] = None) -> dict:
+                   page_size: Optional[int] = None,
+                   spec_k: Optional[int] = None) -> dict:
     """The launch drivers' --tune entry point: map the flag value to a
     (strategy, measurer) pair and warm the cache."""
     if tune not in TUNE_CHOICES:
@@ -36,14 +37,15 @@ def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
     strategy = "model" if tune == "auto" else tune
     return warm_for_model(cfg, seq=seq, batch=batch, cache=cache,
                           measure=measure, strategy=strategy,
-                          page_size=page_size)
+                          page_size=page_size, spec_k=spec_k)
 
 
 def warm_for_model(cfg, *, seq: int, batch: int,
                    cache: Optional[TuningCache] = None,
                    measure=None, strategy: str = "model",
                    verbose: bool = True,
-                   page_size: Optional[int] = None) -> dict:
+                   page_size: Optional[int] = None,
+                   spec_k: Optional[int] = None) -> dict:
     """Autotune the kernel families a model step exercises; returns
     {family: winning-label}.  cfg is a repro.models.config.ModelConfig."""
     cache = cache or default_cache()
@@ -148,6 +150,18 @@ def warm_for_model(cfg, *, seq: int, batch: int,
                 (batch, cfg.n_heads, cfg.n_kv_heads, npp, cfg.hd),
                 dtype="int8" if kv_q else "bfloat16", page_size=page_size,
                 window=cfg.window, **({"kv_bits": 8} if kv_q else {}))
+        if spec_k:
+            # speculative decoding: the batched-verify short-q family at
+            # T = K+1 rows (K drafted tokens plus the last accepted one).
+            # Its own family key — scoring T*G rows per fetched page moves
+            # the memory/compute crossover, so the winner differs from the
+            # single-row decode family at the same page geometry
+            specs["flash_attention_verify"] = KernelSpec.make(
+                "flash_attention_verify",
+                (batch, cfg.n_heads, cfg.n_kv_heads, spec_k + 1, npp,
+                 cfg.hd),
+                dtype="int8" if kv_q else "bfloat16", page_size=page_size,
+                window=0, **({"kv_bits": 8} if kv_q else {}))
     out = {}
     for fam, spec in specs.items():
         try:
@@ -274,6 +288,55 @@ def wall_measurer(reps: int = 3):
             else:
                 fn = lambda: ops.paged_decode_attention(
                     q, kp, vp, bt, pos, cfg, window=w)
+        elif spec.family == "flash_attention_verify":
+            b, h, hkv, t, npp, d = spec.shape
+            ps = p.get("page_size", 64)
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            # same worst-case fragmented pool as the decode family, but T
+            # drafted rows per slot ending at the last cache position
+            n_pages = b * npp + 1
+            q = jax.random.normal(key, (b, t, h, d), dt)
+            kp = jax.random.normal(jax.random.fold_in(key, 1),
+                                   (n_pages, ps, hkv, d), dt)
+            vp = jax.random.normal(jax.random.fold_in(key, 2),
+                                   (n_pages, ps, hkv, d), dt)
+            bt = jnp.asarray(jax.random.permutation(
+                jax.random.fold_in(key, 3),
+                jnp.arange(1, n_pages)).reshape(b, npp), jnp.int32)
+            pos0 = jnp.full((b,), npp * ps - t, jnp.int32)
+            w = p.get("window", 0) or None
+            if p.get("kv_bits"):
+                from repro.quant import quantize_kv
+                kq, ks = quantize_kv(kp.astype(jnp.float32))
+                vq, vs = quantize_kv(vp.astype(jnp.float32))
+                fn = lambda: ops.flash_attention_verify(
+                    q, kq, vq, bt, pos0, cfg, window=w, k_scale=ks,
+                    v_scale=vs)
+            else:
+                fn = lambda: ops.flash_attention_verify(
+                    q, kp, vp, bt, pos0, cfg, window=w)
+        elif spec.family == "ssd":
+            b, h, g, s, pdim, n = spec.shape
+            x = jax.random.normal(key, (b, h, s, pdim)) * 0.5
+            dtv = jax.nn.softplus(
+                jax.random.normal(jax.random.fold_in(key, 1), (b, h, s)))
+            a = -jax.nn.softplus(
+                jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+            bm = jax.random.normal(jax.random.fold_in(key, 3),
+                                   (b, g, s, n)) * 0.5
+            cm = jax.random.normal(jax.random.fold_in(key, 4),
+                                   (b, g, s, n)) * 0.5
+            fn = lambda: ops.ssd(x, dtv, a, bm, cm, cfg,
+                                 chunk=p.get("chunk", 64))
+        elif spec.family == "rglru":
+            b, s, d = spec.shape
+            x = jax.random.normal(key, (b, s, d)) * 0.5
+            r = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+            i = jax.random.normal(jax.random.fold_in(key, 2), (b, s, d))
+            a_param = jax.random.normal(jax.random.fold_in(key, 3), (d,))
+            fn = lambda: ops.rglru(x, r, i, a_param, cfg,
+                                   block_d=p.get("block_d", 128),
+                                   block_t=p.get("block_t", 64))
         elif spec.family in ("flash_attention", "flash_attention_bwd"):
             b, h, hkv, sq, sk, d = spec.shape
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32

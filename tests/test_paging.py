@@ -97,6 +97,20 @@ def test_block_table_overflow_raises_and_leaves_table_intact():
     assert bt[0] == [5, 6]
 
 
+def test_truncate_returns_tail_keeps_prefix():
+    """The speculative-decode rollback primitive: pages leave the table
+    back-to-front, so a shared prefix at the front is never touched."""
+    bt = BlockTables(2, 6)
+    bt.append(0, [7, 3, 9, 5])
+    assert bt.truncate(0, 2) == [9, 5]
+    assert bt[0] == [7, 3]
+    assert bt.truncate(0, 2) == []          # idempotent at the boundary
+    assert bt.truncate(0, 0) == [7, 3]
+    assert bt[0] == []
+    with pytest.raises(ValueError):
+        bt.truncate(0, -1)
+
+
 def test_device_image_null_padding_and_active_nulling():
     bt = BlockTables(3, 4)
     bt.append(0, [3, 1])

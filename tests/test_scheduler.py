@@ -291,6 +291,51 @@ def test_shared_prefix_refcount_lifecycle(tiny_model):
     eng.pool.check()
 
 
+def test_prefix_registry_lru_evicts_oldest_unreferenced(tiny_model):
+    """Bounded registry: registering past ``max_prefixes`` evicts the
+    least-recently-used prefix whose pages only the registry holds; a
+    prefix pinned by a running slot is skipped, and a full registry of
+    in-use prefixes raises instead of evicting."""
+    from repro.serve import PagedEngine
+    cfg, params = tiny_model
+    rng = np.random.default_rng(9)
+    mk = lambda: list(map(int, rng.integers(1, cfg.vocab, 8)))
+    eng = PagedEngine(cfg, params, slots=2, num_pages=24, page_size=8,
+                      max_len=48, chunk=8, decode_block=4)
+    eng.max_prefixes = 2
+    eng.register_prefix("a", mk())
+    eng.register_prefix("b", mk())
+    eng.register_prefix("c", mk())         # full -> evicts "a" (oldest)
+    assert set(eng.prefixes) == {"b", "c"}
+    assert eng.prefix_evictions == 1
+
+    # an admit hit refreshes recency: touch "b", then "c" is the victim
+    sched = Scheduler(eng)
+    tail = mk()[:3]
+    sched.submit(list(eng.prefixes["b"].tokens) + tail, 4, prefix="b")
+    sched.run_until_done()
+    eng.register_prefix("d", mk())
+    assert set(eng.prefixes) == {"b", "d"}
+
+    # a prefix pinned by a RUNNING slot is never the victim
+    sched.submit(list(eng.prefixes["b"].tokens) + tail, 30, prefix="b")
+    sched._admit_waiting()                 # running, pages refcount >= 2
+    eng.register_prefix("e", mk())         # skips "b", evicts "d"
+    assert set(eng.prefixes) == {"b", "e"}
+
+    # both remaining prefixes in use -> loud failure, no eviction
+    sched.submit(list(eng.prefixes["e"].tokens) + tail, 30, prefix="e")
+    sched._admit_waiting()
+    with pytest.raises(RuntimeError, match="every prefix is referenced"):
+        eng.register_prefix("f", mk())
+    assert set(eng.prefixes) == {"b", "e"}
+    sched.run_until_done()
+    for name in list(eng.prefixes):
+        eng.drop_prefix(name)
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
 def test_batched_server_rejects_long_prompt_instead_of_truncating(tiny_model):
     """The launch/serve.py pin: the contiguous server must raise on a
     prompt that exceeds its cache rather than silently dropping tokens."""

@@ -1,0 +1,218 @@
+"""Speculative decoding suite (repro.serve.spec).
+
+The acceptance gate: greedy spec-decode outputs are BITWISE identical to
+non-spec greedy decode on the same prompts — under forced rejection (a
+fresh random draft proposes garbage, every step takes the correction
+path), under a cooperative self-draft (the acceptance upper bound), and
+under pool pressure that forces preemption mid-request.  The tie guard +
+decode-graph rescue (module docstring of spec.py) is what makes this hold
+on XLA CPU, where the T-row verify graph and the 1-row decode graph lower
+with different reduction orders.
+
+Plus the paged-rollback bookkeeping: worst-case K+1 page growth at
+admission (`step_growth_bound`), truncate-based rollback conserving pages,
+and a hypothesis walk over accept/reject counts pinning the pool and
+block-table invariants the engine's decode step relies on.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import (BlockTables, PagePool, Request, Scheduler,
+                         SpecPagedEngine, draft_of, pages_needed)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg):
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, int(n))))
+               for n in (9, 17, 5, 24, 12)]
+    gens = [12, 6, 1, 16, 9]
+    return prompts, gens
+
+
+def _run(make, prompts, gens):
+    eng = make()
+    sched = Scheduler(eng)
+    for p, g in zip(prompts, gens):
+        sched.submit(p, g)
+    done = sched.run_until_done()
+    assert eng.pool.num_live == 0 and not eng.active.any(), "leaked pages"
+    eng.pool.check()
+    return eng, [r.output for r in done], done
+
+
+KW = dict(slots=3, num_pages=40, page_size=8, max_len=64, chunk=8)
+
+
+def _base_outputs(cfg, params, prompts, gens, **kw):
+    from repro.serve import PagedEngine
+    kw = {**KW, **kw}
+    _, out, _ = _run(lambda: PagedEngine(cfg, params, decode_block=4, **kw),
+                     prompts, gens)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity with non-spec decode
+# ---------------------------------------------------------------------------
+
+def test_parity_under_forced_rejection(tiny_model):
+    """A fresh random draft agrees with the target only by chance, so ~every
+    step rejects at row 0 and emits the target's own correction — the
+    worst case for the rollback path and the rescue pass."""
+    cfg, params = tiny_model
+    prompts, gens = _trace(cfg)
+    base = _base_outputs(cfg, params, prompts, gens)
+    eng, out, _ = _run(
+        lambda: SpecPagedEngine(cfg, params, spec_k=4,
+                                rng=jax.random.PRNGKey(7), **KW),
+        prompts, gens)
+    assert out == base
+    assert eng.acceptance_rate < 0.3          # the draft really is garbage
+    assert eng.spec_steps > 0
+
+
+def test_parity_and_multi_token_steps_with_self_draft(tiny_model):
+    """Target as its own draft: every proposal the tie guard clears is
+    accepted, so steps emit >1 token on average — and outputs still match
+    the base engine bitwise."""
+    cfg, params = tiny_model
+    prompts, gens = _trace(cfg)
+    base = _base_outputs(cfg, params, prompts, gens)
+    eng, out, _ = _run(
+        lambda: SpecPagedEngine(cfg, params, spec_k=4, draft_cfg=cfg,
+                                draft_params=params, **KW),
+        prompts, gens)
+    assert out == base
+    assert eng.acceptance_rate > 0.2
+    assert eng.decoded_tokens / eng.spec_steps > 1.2
+
+
+def test_parity_under_preemption(tiny_model):
+    """A pool small enough to force preemption: rollback, requeue, and
+    re-prefill (target AND draft caches) still land on the base outputs."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, 6)))
+               for _ in range(3)]
+    gens = [18] * 3
+    kw = dict(slots=3, num_pages=8, page_size=8, max_len=32, chunk=8)
+    base = _base_outputs(cfg, params, prompts, gens, **kw)
+    eng, out, done = _run(
+        lambda: SpecPagedEngine(cfg, params, spec_k=4,
+                                rng=jax.random.PRNGKey(7), **kw),
+        prompts, gens)
+    assert sum(r.preemptions for r in done) > 0, \
+        "pool failed to force preemption — weaken num_pages"
+    assert out == base
+
+
+# ---------------------------------------------------------------------------
+# construction + accounting
+# ---------------------------------------------------------------------------
+
+def test_draft_of_shrinks_but_shares_vocab(tiny_model):
+    cfg, _ = tiny_model
+    d = draft_of(cfg)
+    assert d.vocab == cfg.vocab
+    assert d.n_layers <= cfg.n_layers and d.d_model <= cfg.d_model
+
+
+def test_vocab_mismatch_rejected(tiny_model):
+    import dataclasses
+    cfg, params = tiny_model
+    bad = dataclasses.replace(draft_of(cfg), vocab=cfg.vocab // 2)
+    with pytest.raises(ValueError, match="vocab"):
+        SpecPagedEngine(cfg, params, spec_k=2, draft_cfg=bad, **KW)
+
+
+def test_spec_k_validated(tiny_model):
+    cfg, params = tiny_model
+    with pytest.raises(ValueError, match="spec_k"):
+        SpecPagedEngine(cfg, params, spec_k=0, **KW)
+
+
+def test_step_growth_bound_accounts_k_plus_1_rows(tiny_model):
+    """The scheduler's admission headroom hook: a verify step may append
+    K+1 rows per running slot, and an incoming request additionally needs
+    its prompt pages plus its own first step's growth."""
+    cfg, params = tiny_model
+    eng = SpecPagedEngine(cfg, params, spec_k=4,
+                          rng=jax.random.PRNGKey(7), **KW)
+    ps = eng.page_size
+    req = Request(rid=0, prompt=[1] * 9, gen=12)
+    eng.admit(0, req)
+    written = int(eng.written[0])
+    want = max(0, pages_needed(written + 5, ps) - eng.bt.num_pages(0))
+    assert eng.step_growth_bound() == want
+    incoming = Request(rid=1, prompt=[1] * 11, gen=8)
+    assert eng.step_growth_bound(incoming) == \
+        want + pages_needed(11 + 5, ps)
+    eng.pool.release(eng.bt.drop(0))
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: accept/reject walks conserve pages exactly
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    FAST = settings(max_examples=60, deadline=None)
+
+    @given(st.integers(1, 17), st.integers(1, 8),
+           st.lists(st.integers(0, 9), min_size=1, max_size=40))
+    @FAST
+    def test_prop_spec_walk_conserves_pages(prompt_len, spec_k, accepts):
+        """The decode step's exact page dance, abstracted from the model:
+        grow to the worst case (written + K + 1 rows), emit 1..K+1 tokens,
+        truncate back to the accepted rows.  After every step the pool
+        conserves (free + live == capacity) and the block table holds
+        EXACTLY pages_needed(written) pages — the invariant the verify
+        kernel's pos-masking relies on."""
+        ps = 4
+        pool = PagePool(64, ps)
+        bt = BlockTables(1, 64)
+        written = prompt_len
+        bt.append(0, pool.alloc(pages_needed(written, ps)))
+        for acc in accepts:
+            need = pages_needed(written + spec_k + 1, ps) - bt.num_pages(0)
+            if need > 0:
+                bt.append(0, pool.alloc(need))
+            emitted = min(acc, spec_k) + 1          # correction or bonus
+            written += emitted
+            pool.release(bt.truncate(0, pages_needed(written, ps)))
+            assert pool.num_free + pool.num_live == pool.capacity
+            assert bt.num_pages(0) == pages_needed(written, ps)
+            pool.check()
+        pool.release(bt.drop(0))
+        assert pool.num_free == pool.capacity, "spec walk leaked pages"
+        pool.check()
+
+    @given(st.integers(0, 5), st.integers(2, 6))
+    @FAST
+    def test_prop_truncate_keeps_prefix_returns_tail(n_keep, n_total):
+        bt = BlockTables(1, 8)
+        pages = list(range(3, 3 + n_total))
+        bt.append(0, pages)
+        tail = bt.truncate(0, n_keep)
+        assert bt[0] == pages[:min(n_keep, n_total)]
+        assert tail == pages[min(n_keep, n_total):]
+else:
+    @pytest.mark.skip(reason="hypothesis not installed in this environment")
+    def test_prop_hypothesis_layer():
+        pass

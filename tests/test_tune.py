@@ -193,6 +193,31 @@ def test_ops_auto_resolves_from_persisted_cache(scratch_default_cache):
     assert tune_search.SEARCH_COUNT == before + 1       # served from disk
 
 
+def test_verify_family_picks_its_own_degree():
+    """The short-q verify family is its own tuning problem: at one serving
+    geometry (small-batch GQA, 2k paged cache, 512-token prompts) the three
+    attention families split three ways.  Verify amortises the per-split
+    q-pane and combine traffic over T rows, so it coarsens harder than
+    single-row decode; the causal prefill tile at bq=256 keeps more work per
+    pane and stops earlier.  Geometry shared with benchmarks/specdecode.py."""
+    b, h, hkv, d = 2, 32, 4, 128
+    s, ps = 2048, 128
+    npp = s // ps
+    dec = search(KernelSpec.make("decode_attention_paged", (b, h, hkv, npp, d),
+                                 dtype="bfloat16", page_size=ps, window=0))
+    ver = search(KernelSpec.make("flash_attention_verify",
+                                 (b, h, hkv, 5, npp, d),
+                                 dtype="bfloat16", page_size=ps, window=0))
+    pre = search(KernelSpec.make("flash_attention", (b, h, hkv, 512, 512, d),
+                                 dtype="bfloat16", causal=True, window=0,
+                                 bq=256, bkv=128))
+    assert dec.best.label == "con4"
+    assert ver.best.label == "con8"
+    assert pre.best.label == "con2"
+    # the criterion proper: verify's winning degree differs from both
+    assert ver.best.degree not in (dec.best.degree, pre.best.degree)
+
+
 def test_ops_auto_ref_backend_skips_tuning():
     a = jax.random.normal(jax.random.PRNGKey(2), (64, 64))
     b = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
