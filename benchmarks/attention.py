@@ -15,6 +15,10 @@ For each sequence length S emit a ``fwd`` and a ``fwdbwd`` row group:
   AUTO           the repro.tune picks over the full (kind, degree) spaces —
                  forward and backward resolved INDEPENDENTLY through their
                  own families, summed for the fwdbwd row
+  sparse-w*      the block-sparse live-index kernel at a window=S/4 local
+                 pattern, its own family's AUTO pick — the short-context
+                 end of the crossover (benchmarks/sparse_attention.py has
+                 the long-context side, where it wins)
 
 `derived` is the modeled v5e time (core/analysis.flash_attention_cost +
 flash_attention_bwd_cost); `us_per_call` is CPU interpret wall time at a
@@ -122,6 +126,23 @@ def main() -> None:
         fb = cf.modeled_s + cb.modeled_s
         emit(f"attn,S{s},fwdbwd,AUTO[{best_f.label}/{best_b.label}]", -1.0,
              fb * 1e6, speedup=round(dense_fb / fb, 2))
+        # the block-sparse family at a window=S/4 local pattern: its own
+        # AUTO pick over live-SLOT degrees, modeled against the dense fwd
+        # AUTO row (the full table lives in benchmarks/sparse_attention.py)
+        from repro.core.analysis import flash_attention_sparse_cost
+        from repro.kernels.sparse_attention import build_block_index
+        w = s // 4
+        sidx = build_block_index(s, s, BQ, BKV, causal=True, window=w)
+        ml, nl = int(sidx.shape[1]), int((sidx >= 0).sum())
+        spec_s = KernelSpec.make("flash_attention_sparse", (B, H, HKV, s, s, D),
+                                 dtype="bfloat16", bq=BQ, bkv=BKV, causal=True,
+                                 window=w, gstride=0, max_live=ml, n_live=nl)
+        best_s = search(spec_s).best
+        cs = flash_attention_sparse_cost(B, H, HKV, s, s, D, best_s, bq=BQ,
+                                         bkv=BKV, max_live=ml, n_live=nl)
+        emit(f"attn,S{s},fwd,sparse-w{w}/AUTO[{best_s.label}]", -1.0,
+             cs.modeled_s * 1e6,
+             speedup=round(dense_f.modeled_s / cs.modeled_s, 2))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,10 @@ Tables (one per paper figure):
            geometry (decode vs verify vs prefill), short-q verify kernel
            cost across draft depths, end-to-end SpecPagedEngine parity +
            acceptance under forced rejections and a self-draft
+  sparse_attention — block-sparse long-context attention: live-block
+           visits and modeled cost vs the dense causal grid across 4k-64k
+           contexts, the two families' distinct winners at the pinned
+           shape, and the gemma3-1b shrink 8k-context CI smoke
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -41,7 +45,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
                         roofline, tuned, decode, moe, attention, quant,
-                        paging, specdecode)
+                        paging, specdecode, sparse_attention)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -59,6 +63,7 @@ TABLES = {
     "quant": quant.main,
     "paging": paging.main,
     "specdecode": specdecode.main,
+    "sparse_attention": sparse_attention.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

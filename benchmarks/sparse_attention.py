@@ -1,0 +1,160 @@
+"""Block-sparse long-context attention table: live-block visits and modeled
+cost vs the dense causal grid across context lengths 4k-64k.
+
+Per context length S (window=512 local attention) emit:
+
+  visits      dense causal-live kv-block steps vs the NULL-padded live
+              index's non-null entries — the traffic the sparse kernel
+              actually issues (`ratio` is the visit reduction; the ISSUE
+              gate is >= 8x at 32k)
+  dense/...   modeled v5e time of the dense-mask flash kernel at its AUTO
+              degree (its own `flash_attention` family pick)
+  sparse/...  modeled time of the block-sparse kernel at fixed live-slot
+              degrees and at the `flash_attention_sparse` family's AUTO
+              pick; `speedup` is vs the dense AUTO row (gate: >= 2x at 32k)
+
+Then two pinned rows:
+
+  winners     the two families' AUTO picks at S=33280 (260 q-blocks): the
+              dense family's q-row coarsening cannot tile degree 8 there
+              while the sparse family's slot axis can — the degrees MUST
+              differ (test_tune.py::test_sparse_family_picks_its_own_degree
+              pins the same shape)
+  wall        CPU-interpret wall time sparse vs dense kernel at a reduced
+              geometry (transparency only, as everywhere in benchmarks/)
+
+And the long-context CI smoke: a gemma3-1b shrink-profile forward at 8k
+context under attn_backend="pallas" (sparse routing on its window=16 local
+layers), asserting finite output — the row CI reads from
+BENCH_sparse_attention.json.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CoarseningConfig
+from repro.core.analysis import flash_attention_sparse_cost
+from repro.kernels import ops
+from repro.kernels.sparse_attention import build_block_index, make_kernel
+from repro.tune import KernelSpec, search
+from benchmarks.common import wall_us, emit
+
+# modeled (paper-scale) geometry
+B, HKV, G, D, BQ, BKV = 1, 4, 4, 128, 128, 128
+H = HKV * G
+WINDOW = 512
+LENGTHS = (4096, 8192, 16384, 32768, 65536)
+DEGREES = (1, 2, 4, 8)
+
+# measured (CPU interpret) geometry
+MB, MHKV, MG, MD, MBQ, MBKV = 1, 2, 2, 32, 64, 64
+MH = MHKV * MG
+MS, MW = 1024, 128
+
+
+def _dense_visits(s: int, bq: int, bkv: int) -> int:
+    """Causal-live kv-block steps of the dense grid (credits its causal
+    early-exit; the window-dead steps are the waste the index removes)."""
+    return sum((i * bq + bq - 1) // bkv + 1 for i in range(s // bq))
+
+
+def _sparse_auto(s: int, ml: int, nl: int):
+    spec = KernelSpec.make("flash_attention_sparse", (B, H, HKV, s, s, D),
+                           dtype="bfloat16", bq=BQ, bkv=BKV, causal=True,
+                           window=WINDOW, gstride=0, max_live=ml, n_live=nl)
+    return search(spec).best
+
+
+def _dense_auto(s: int):
+    spec = KernelSpec.make("flash_attention", (B, H, HKV, s, s, D),
+                           dtype="bfloat16", bq=BQ, bkv=BKV, causal=True,
+                           window=0)
+    return search(spec).best
+
+
+def _wall_rows() -> None:
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (MB, MH, MS, MD), jnp.float32) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (MB, MHKV, MS, MD), jnp.float32) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (MB, MHKV, MS, MD), jnp.float32)
+    idx = build_block_index(MS, MS, MBQ, MBKV, causal=True, window=MW)
+    cfg = CoarseningConfig.parse("con2")
+    sp = make_kernel(MB, MH, MHKV, MS, MD, cfg, bq=MBQ, bkv=MBKV,
+                     max_live=idx.shape[1], causal=True, window=MW)
+    f_sp = jax.jit(lambda a, b2, c: sp(a, b2, c, idx))
+    us_sp = wall_us(lambda: f_sp(q, k, v))
+    f_dn = jax.jit(lambda a, b2, c: ops.flash_attention(
+        a, b2, c, cfg, bq=MBQ, bkv=MBKV, causal=True, window=MW))
+    us_dn = wall_us(lambda: f_dn(q, k, v))
+    emit(f"sparse_attn,wall,S{MS},w{MW},dense/con2", us_dn, -1.0)
+    emit(f"sparse_attn,wall,S{MS},w{MW},sparse/con2", us_sp, -1.0,
+         speedup=round(us_dn / us_sp, 2))
+
+
+def _ci_smoke() -> None:
+    """gemma3-1b shrink profile, 8k-token prefill forward through the
+    sparse-routed pallas backend (the long-context CI smoke)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = dataclasses.replace(get_config("gemma3-1b").reduced(),
+                              attn_backend="pallas")
+    params = M.lm_init(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 8192), 0, cfg.vocab)
+    f = jax.jit(lambda p, b: M.lm_apply(p, b, cfg)[0])
+    us = wall_us(lambda: f(params, {"tokens": tok}), reps=1)
+    hidden = np.asarray(f(params, {"tokens": tok}), np.float32)
+    ok = bool(np.isfinite(hidden).all())
+    emit("sparse_attn,smoke,gemma3-1b-shrink,S8192", us, -1.0,
+         status="ok" if ok else "FAIL")
+    assert ok
+
+
+def main() -> None:
+    for s in LENGTHS:
+        idx = build_block_index(s, s, BQ, BKV, causal=True, window=WINDOW)
+        ml, nl = int(idx.shape[1]), int((idx >= 0).sum())
+        dv = _dense_visits(s, BQ, BKV)
+        emit(f"sparse_attn,S{s},visits", -1.0, -1.0, dense=dv, sparse=nl,
+             ratio=round(dv / nl, 1))
+        best_d = _dense_auto(s)
+        from repro.core.analysis import flash_attention_cost
+        cd = flash_attention_cost(B, H, HKV, s, s, D, best_d, bq=BQ, bkv=BKV)
+        emit(f"sparse_attn,S{s},dense/AUTO[{best_d.label}]", -1.0,
+             cd.modeled_s * 1e6, speedup=1.0)
+        for deg in DEGREES:
+            if ml % deg:
+                emit(f"sparse_attn,S{s},sparse/con{deg}", -1, -1, status="NA")
+                continue
+            cfg = CoarseningConfig.parse(f"con{deg}" if deg > 1 else "none")
+            cs = flash_attention_sparse_cost(B, H, HKV, s, s, D, cfg, bq=BQ,
+                                             bkv=BKV, max_live=ml, n_live=nl)
+            emit(f"sparse_attn,S{s},sparse/con{deg}", -1.0,
+                 cs.modeled_s * 1e6,
+                 speedup=round(cd.modeled_s / cs.modeled_s, 2))
+        best_s = _sparse_auto(s, ml, nl)
+        cs = flash_attention_sparse_cost(B, H, HKV, s, s, D, best_s, bq=BQ,
+                                         bkv=BKV, max_live=ml, n_live=nl)
+        emit(f"sparse_attn,S{s},sparse/AUTO[{best_s.label}]", -1.0,
+             cs.modeled_s * 1e6,
+             speedup=round(cd.modeled_s / cs.modeled_s, 2))
+
+    # pinned distinct-winner shape (shared with tests/test_tune.py)
+    s = 33280
+    idx = build_block_index(s, s, BQ, BKV, causal=True, window=WINDOW)
+    ml, nl = int(idx.shape[1]), int((idx >= 0).sum())
+    best_s, best_d = _sparse_auto(s, ml, nl), _dense_auto(s)
+    emit(f"sparse_attn,S{s},winners", -1.0, -1.0,
+         sparse=best_s.label, dense=best_d.label,
+         distinct=best_s.degree != best_d.degree)
+
+    _wall_rows()
+    _ci_smoke()
+
+
+if __name__ == "__main__":
+    main()

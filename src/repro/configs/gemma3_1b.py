@@ -8,4 +8,9 @@ CONFIG = ModelConfig(
     vocab=262144, head_dim=256,
     pattern_period=(ATTN_LOCAL,) * 5 + (ATTN_GLOBAL,), window=512,
     rope_theta=1e6, tie_embeddings=True,
+    # the 5:1 local layers are the block-sparse prefill target: with
+    # attn_backend="pallas", attn_sparse="auto" routes window=512 prefill
+    # through the live-index kernel (long-context gate: at 32k ctx the
+    # index visits ~26x fewer kv blocks than the dense causal grid)
+    attn_sparse="auto",
 )

@@ -8,4 +8,9 @@ CONFIG = ModelConfig(
     vocab=256000, head_dim=256,
     pattern_period=(RECURRENT, RECURRENT, ATTN_LOCAL), window=2048,
     lru_width=2560, tie_embeddings=True,
+    # every attention layer here is local: with attn_backend="pallas",
+    # attn_sparse="auto" takes the block-sparse live-index kernel for
+    # window=2048 prefill past ~4k tokens (below that the dense grid is
+    # already mostly live)
+    attn_sparse="auto",
 )

@@ -399,6 +399,87 @@ def flash_attention_bwd_cost(b: int, h: int, hkv: int, sq: int, sk: int,
     )
 
 
+def flash_attention_sparse_cost(b: int, h: int, hkv: int, sq: int, sk: int,
+                                d: int, cfg: CoarseningConfig, *,
+                                bq: int = 128, bkv: int = 128,
+                                max_live: int = 8, n_live: int | None = None,
+                                dtype_bytes: int = 2,
+                                dense: bool = False) -> KernelCost:
+    """Block-sparse flash forward: each q-block program walks only the
+    ``max_live`` (NULL-padded) kv blocks its per-q-block index lists,
+    charging live-block traffic ONLY — the dense grid's dead steps are
+    gone from the model entirely, which is where the >= 8x long-context
+    win lives.
+
+    The coarsening axis is the live-SLOT axis.  As in the paged decode
+    model, the index lookup kills physical contiguity: BOTH kinds issue C
+    table-resolved block descriptors per operand per step (consecutive
+    slots usually name adjacent blocks for window bands, but the kernel
+    still resolves and loads each separately).  What the degree amortizes
+    is the per-step dependent index resolution — the C unrolled lookups
+    within one step read the same resident index row and pipeline, so the
+    HBM-latency hop is paid once per STEP, i.e. max_live/C times per
+    program instead of max_live times.
+
+    ``n_live`` is the TOTAL number of non-NULL index entries across all nq
+    rows (the builder knows it exactly); NULL slots issue no DMA and run
+    no compute in the kernel, so the model bills the average live
+    occupancy rather than the padded width.  Gapped coarsening spreads
+    each row's NULL tail across every step (a partially-filled row keeps
+    all its steps live), where consecutive concentrates the tail into
+    whole dead steps — so gapped pays the per-step resolution hop on more
+    steps: the paper's divergence penalty, relocated to an irregular work
+    list.
+
+    dense=True is the dense-mask flash kernel at base config walking the
+    full causal grid — the baseline the sparse benchmark gates against.
+    """
+    if dense:
+        return flash_attention_cost(b, h, hkv, sq, sk, d, CoarseningConfig(),
+                                    bq=bq, bkv=bkv, causal=True,
+                                    dtype_bytes=dtype_bytes, dense=False)
+    c = cfg.degree
+    gapped = cfg.kind == KIND_GAPPED
+    nq = max(1, sq // bq)
+    n_steps = max(1, max_live // c)
+    grid = b * h * nq * n_steps
+    if n_live is None:
+        n_live = nq * max_live
+    frac = min(1.0, n_live / float(nq * max_live))   # live slot occupancy
+    # an average row holds L = frac*max_live live slots; consecutive packs
+    # them into the first ceil(L/c) steps, gapped strides them across
+    # ~min(L, n_steps) steps — each step with any live slot pays the
+    # index-resolution hop
+    avg_l = frac * max_live
+    live_steps = min(float(n_steps),
+                     avg_l if gapped else -(-avg_l // c))
+    # C block descriptors per operand per step, resolved through the
+    # index; NULL slots issue nothing, so a step carries C*frac live
+    # panes on average
+    kv_dma_s = 2 * _dma_time(bkv * d * dtype_bytes, c * frac)  # K + V
+    kv_dma_s += HBM_LATENCY_S * live_steps / n_steps  # per-step index hop
+    flops = 4.0 * c * frac * bq * bkv * d                     # qk + pv
+    rate = MXU_FLOPS_BF16 if dtype_bytes == 2 else MXU_FLOPS_F32
+    eff = min(1.0, bq / 128) * min(1.0, min(bkv, d) / 128)
+    compute_s = flops / (rate * eff)
+    # per-program q pane in + o pane out (f32) + the index row
+    prog_s = (_dma_time(bq * d * dtype_bytes, 1)
+              + _dma_time(bq * d * 4.0, 1)
+              + _dma_time(max_live * 4.0, 1))
+    step = max(kv_dma_s, compute_s)
+    total = b * h * nq * prog_s + (kv_dma_s + compute_s) \
+        + step * max(0, grid - 1)
+    vmem = 2 * int((bq + 2 * c * bkv) * d) * dtype_bytes \
+        + 2 * int(bq * (d + 2)) * 4 + max_live * 4
+    return KernelCost(
+        label=cfg.label, grid=grid, dmas_per_step=2 * c,
+        dma_bytes=bkv * d * dtype_bytes, vmem_bytes=vmem, dma_sems=2 * c,
+        dma_s_per_step=kv_dma_s, compute_s_per_step=compute_s,
+        modeled_s=total,
+        bound="memory" if kv_dma_s >= compute_s else "compute",
+    )
+
+
 def decode_attention_cost(b: int, h: int, hkv: int, s: int, d: int,
                           cfg: CoarseningConfig, *, bkv: int = 128,
                           kv_len: int | None = None, dtype_bytes: int = 2,

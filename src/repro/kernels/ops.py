@@ -25,6 +25,7 @@ from repro.kernels import (
     stencil as _stencil,
     chunk_scan as _scan,
     flash_attention as _flash,
+    sparse_attention as _sparse,
     decode_attention as _decode,
     moe_ffn as _moe_ffn,
     ssd as _ssd,
@@ -276,6 +277,136 @@ def flash_attention(q, k, v, cfg: CoarseningConfig | str = BASE, *,
             else CoarseningConfig.parse(bwd_cfg)
     return _flash_vjp_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv,
                          causal, window, scale, q.dtype.name)(q, k, v)
+
+
+@functools.lru_cache(maxsize=256)
+def _flash_sparse_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv, causal,
+                     window, global_stride, scale, dtype_name):
+    """Custom-VJP block-sparse flash attention for one geometry + pattern.
+
+    The per-q-block live-KV index is a pure function of the geometry, so it
+    is built host-side here and closed over as a jit constant — callers
+    never thread it.  The forward runs the sparse kernel (coarsened over
+    the live-slot axis by ``cfg``); the backward reuses the DENSE-mask
+    backward kernels: the sparse forward's (m, l) residuals are identical
+    to the dense-mask forward's (the index covers the pattern mask
+    exactly; verified in tests), so `make_bwd_dq_kernel` /
+    `make_bwd_dkv_kernel` consume them unchanged.  For global-stride
+    patterns the dense backward kernels can't express the strided columns,
+    so the backward differentiates the jnp oracle instead — strided
+    TRAINING pays dense cost (documented fallback); strided prefill still
+    takes the sparse kernel.
+    """
+    # kept as a host numpy constant: converting to a device array here
+    # would bind it to whatever trace is active at build time (this
+    # factory is lru-cached, so that tracer would leak into later traces);
+    # as numpy it is lifted per-trace like any closure constant
+    idx = _sparse.build_block_index(sq, sk, bq, bkv, causal=causal,
+                                    window=window,
+                                    global_stride=global_stride)
+    max_live = int(idx.shape[1])
+    mk = functools.partial(_sparse.make_kernel, b, h, hkv, sq, d, cfg,
+                           bq=bq, bkv=bkv, max_live=max_live, causal=causal,
+                           window=window, global_stride=global_stride,
+                           scale=scale, sk=sk, interpret=_interpret())
+    fwd = mk()
+    fwd_res = mk(return_residuals=True)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd(q, k, v, idx)
+
+    def attn_fwd(q, k, v):
+        from jax.ad_checkpoint import checkpoint_name
+        o, m, l = fwd_res(q, k, v, idx)
+        o = checkpoint_name(o, "flash_attn_out")
+        m = checkpoint_name(m, "flash_attn_out")
+        l = checkpoint_name(l, "flash_attn_out")
+        return o, (q, k, v, o, m, l)
+
+    def attn_bwd(res, g):
+        q, k, v, o, m, l = res
+        g = g.astype(jnp.float32)
+        if global_stride:
+            primal = functools.partial(
+                _sparse.ref_sparse_attention, causal=causal, window=window,
+                global_stride=global_stride, scale=scale)
+            _, vjp = jax.vjp(primal, q, k, v)
+            dq, dk, dv = vjp(g)
+            return (dq.astype(q.dtype), dk.astype(k.dtype),
+                    dv.astype(v.dtype))
+        rbwd = resolve_cfg(bwd_cfg, "flash_attention_bwd",
+                           (b, h, hkv, sq, sk, d), dtype=dtype_name,
+                           backend="pallas", bq=bq, bkv=bkv,
+                           causal=bool(causal))
+        # dQ at BASE: cfg's degree is a live-SLOT degree, not a q-row one
+        bwd_dq = _flash.make_bwd_dq_kernel(b, h, hkv, sq, d, BASE, bq=bq,
+                                           bkv=bkv, causal=causal,
+                                           window=window, scale=scale, sk=sk,
+                                           interpret=_interpret())
+        bwd_dkv = _flash.make_bwd_dkv_kernel(b, h, hkv, sq, d, rbwd, bq=bq,
+                                             bkv=bkv, causal=causal,
+                                             window=window, scale=scale,
+                                             sk=sk, interpret=_interpret())
+        delta = jnp.sum(g * o, axis=-1)                # (B,H,Sq) f32
+        dq = bwd_dq(q, k, v, g, m, l, delta)
+        dk, dv = bwd_dkv(q, k, v, g, m, l, delta)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return jax.jit(attn)
+
+
+@functools.lru_cache(maxsize=256)
+def _sparse_ref_fn(causal, window, global_stride, scale):
+    return jax.jit(functools.partial(_sparse.ref_sparse_attention,
+                                     causal=causal, window=window,
+                                     global_stride=global_stride,
+                                     scale=scale))
+
+
+def flash_attention_sparse(q, k, v, cfg: CoarseningConfig | str = BASE, *,
+                           bwd_cfg: CoarseningConfig | str | None = None,
+                           bq: int = 128, bkv: int = 128, causal: bool = True,
+                           window: int | None = None,
+                           global_stride: int | None = None,
+                           scale: float | None = None,
+                           backend: str = "pallas"):
+    """Block-sparse flash attention over a per-q-block live-KV index.
+    q: (B,H,Sq,D); k, v: (B,Hkv,Sk,D) -> (B,H,Sq,D) f32.
+
+    Each q-block program walks only the kv blocks with live (q, k) pairs
+    under the pattern {``causal``, sliding ``window``, LongFormer-style
+    ``global_stride`` columns}; ``cfg`` coarsens over the LIVE-SLOT axis
+    (consecutive = adjacent index slots, gapped = slots strided
+    max_live/degree apart).  The ``flash_attention_sparse`` tuner family
+    keys on the pattern (window/gstride/max_live join the spec), so a 32k
+    window=512 instance occupies a different cache row — and picks a
+    different winning degree — than the dense family at the same shape.
+    backend='ref' is the dense-mask jnp oracle (the parity target)."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if backend == "ref":
+        return _sparse_ref_fn(causal, window, global_stride, scale)(q, k, v)
+    idx = _sparse.build_block_index(sq, sk, bq, bkv, causal=causal,
+                                    window=window,
+                                    global_stride=global_stride)
+    max_live, n_live = int(idx.shape[1]), int((idx >= 0).sum())
+    cfg = resolve_cfg(cfg, "flash_attention_sparse", (b, h, hkv, sq, sk, d),
+                      dtype=q.dtype.name, backend=backend, bq=bq, bkv=bkv,
+                      causal=bool(causal), window=window or 0,
+                      gstride=global_stride or 0, max_live=max_live,
+                      n_live=n_live)
+    if bwd_cfg is None:
+        bwd_cfg = "auto"
+    # unresolved "auto" rides into the VJP rule exactly as in
+    # flash_attention: forward-only callers never pay a bwd-family search
+    if isinstance(bwd_cfg, str):
+        bwd_cfg = bwd_cfg if bwd_cfg == "auto" \
+            else CoarseningConfig.parse(bwd_cfg)
+    return _flash_sparse_fn(b, h, hkv, sq, sk, d, cfg, bwd_cfg, bq, bkv,
+                            causal, window, global_stride, scale,
+                            q.dtype.name)(q, k, v)
 
 
 @functools.lru_cache(maxsize=256)

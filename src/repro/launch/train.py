@@ -178,6 +178,16 @@ def main():
                          "blocks through the coarsened custom-VJP flash "
                          "kernel (attn_cfg/attn_bwd_cfg from the tuning "
                          "cache --tune warms)")
+    ap.add_argument("--attn-sparse", default=None, choices=["auto", "off"],
+                    help="block-sparse dispatch for local-attention layers "
+                         "(window set): 'auto' routes eligible prefill "
+                         "geometries through the live-index kernel, 'off' "
+                         "pins the dense-mask kernel")
+    ap.add_argument("--attn-global-stride", type=int, default=None,
+                    help="LongFormer-style global columns on local layers: "
+                         "every Nth kv position stays visible past the "
+                         "window (needs a windowed arch; training through "
+                         "a strided pattern differentiates the jnp oracle)")
     ap.add_argument("--quant", default=None,
                     choices=[None, "none", "int8", "int4"],
                     help="after training, quantize the weights (repro.quant "
@@ -191,6 +201,13 @@ def main():
     if args.attn_backend:
         import dataclasses
         cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
+    if args.attn_sparse:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_sparse=args.attn_sparse)
+    if args.attn_global_stride:
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  attn_global_stride=args.attn_global_stride)
     losses, _ = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                       ckpt_dir=args.ckpt_dir, n_micro=args.n_micro,
                       remat=args.remat, lr=args.lr,

@@ -49,8 +49,14 @@ def attn_block(p, x, cfg: ModelConfig, *, kind: str, pos, mrope_pos3=None,
     q, k, v = L.qkv_project(p["attn"], h, cfg, pos, mrope_pos3=mrope_pos3)
     q = shard.constrain_heads(q, cfg.n_heads)
     k = shard.constrain_heads(k, cfg.n_kv_heads)
+    # sparse knobs ride only the LOCAL self-attention site (not _attn_kw:
+    # cross/enc attention must never see a window-derived live index)
     o = L.flash_attention(q, k, v, causal=True, window=window, q_pos=pos,
-                          pos_trivial=pos_trivial, **_attn_kw(cfg))
+                          pos_trivial=pos_trivial,
+                          global_stride=(cfg.attn_global_stride
+                                         if kind == ATTN_LOCAL else None),
+                          sparse=cfg.attn_sparse,
+                          sparse_cfg=cfg.attn_sparse_cfg, **_attn_kw(cfg))
     o = o.reshape(x.shape[0], x.shape[1], -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     x = x + o
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -163,7 +169,8 @@ def attn_cache_init(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16):
     per-(token, kv-head) f32 scales — ~half the bytes of a bf16 cache, which
     is what roughly doubles the slots*max_len a host can hold.  (Enc-dec
     self-attn caches stay dense: the decoder blocks there don't carry the
-    quantize-on-append path.)"""
+    quantize-on-append path.  The enc-dec CROSS cache does quantize — it is
+    written once at prefill, see lm_init_cache/_prefill_enc_cache.)"""
     if cfg.kv_quant == "int8" and not cfg.is_encdec:
         return {"k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), jnp.int8),
                 "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.hd), jnp.int8),
@@ -600,15 +607,29 @@ def dec_block_init(key, cfg: ModelConfig):
             "ffn": L.ffn_init(ks[2], cfg.d_model, cfg.d_ff)}
 
 
-def _cross_attention(p, x, enc_kv, cfg: ModelConfig):
+def _cross_attention(p, x, enc_kv, cfg: ModelConfig, enc_scales=None):
     b, s, _ = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     q = (x @ L.asdense(p["wq"], x.dtype)).reshape(b, s, nq, hd)
     k, v = enc_kv
+    if enc_scales is not None:
+        # quantized cross cache (cfg.kv_quant="int8"): int8 payloads with
+        # per-(token, kv-head) scales, dequantized to the activation dtype
+        from repro.quant.qtypes import dequantize_kv
+        ks, vs = enc_scales
+        k = dequantize_kv(k, ks).astype(x.dtype)
+        v = dequantize_kv(v, vs).astype(x.dtype)
     # non-causal cross attention: the kernel serves Sq != Sk geometries
     return L.flash_attention(q, k, v, causal=False,
                              **_attn_kw(cfg)).reshape(b, s, -1) \
         @ L.asdense(p["wo"], x.dtype)
+
+
+def _enc_scales(cache):
+    """(k_scale, v_scale) from a cross cache when quantized, else None."""
+    if "enc_k_scale" in cache:
+        return cache["enc_k_scale"], cache["enc_v_scale"]
+    return None
 
 
 def enc_kv(p, enc_out, cfg: ModelConfig):
@@ -652,11 +673,12 @@ def dec_block_prefill(p, x, cfg: ModelConfig, cache, *, pos0):
     x = x + o.reshape(b, t, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,
-                             (cache["enc_k"], cache["enc_v"]), cfg)
+                             (cache["enc_k"], cache["enc_v"]), cfg,
+                             enc_scales=_enc_scales(cache))
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    enc = {kk: cache[kk] for kk in cache if kk.startswith("enc_")}
     return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), {"k": kc, "v": vc,
-                                    "enc_k": cache["enc_k"],
-                                    "enc_v": cache["enc_v"]}
+                                                             **enc}
 
 
 def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
@@ -670,8 +692,9 @@ def dec_block_decode(p, x, cfg: ModelConfig, cache, *, pos):
     x = x + o.reshape(x.shape[0], 1, -1) @ L.asdense(p["attn"]["wo"], x.dtype)
     h = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
     x = x + _cross_attention(p["xattn"], h,
-                             (cache["enc_k"], cache["enc_v"]), cfg)
+                             (cache["enc_k"], cache["enc_v"]), cfg,
+                             enc_scales=_enc_scales(cache))
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    enc = {kk: cache[kk] for kk in cache if kk.startswith("enc_")}
     return x + L.ffn(p["ffn"], h, backend=cfg.ffn_backend), {"k": kc, "v": vc,
-                                    "enc_k": cache["enc_k"],
-                                    "enc_v": cache["enc_v"]}
+                                                             **enc}

@@ -101,6 +101,20 @@ class ModelConfig:
     attn_bq: int = 128
     attn_bkv: int = 128
 
+    # block-sparse long-context prefill (kernels/sparse_attention.py): when
+    # attn_backend="pallas" and a layer has a window (ATTN_LOCAL), "auto"
+    # routes eligible geometries to the block-sparse kernel — each q-block
+    # program walks only the kv blocks named by a precomputed live index,
+    # coarsened over the live-slot axis by attn_sparse_cfg (spec label or
+    # "auto" through the flash_attention_sparse tuner family).  "off" pins
+    # the dense-mask kernel.  attn_global_stride=g additionally keeps every
+    # g-th kv position visible past the window on local layers
+    # (LongFormer-style global columns; needs window; training through a
+    # strided pattern differentiates the jnp oracle — dense cost).
+    attn_sparse: str = "auto"
+    attn_sparse_cfg: str = "auto"
+    attn_global_stride: Optional[int] = None
+
     # weight-only quantization (repro.quant): "none" | "int8" (per-channel
     # symmetric) | "int4" (group-wise, quant_group rows per scale).  The
     # field records the format `quantize_params` applied to this model's

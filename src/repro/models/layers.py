@@ -282,7 +282,8 @@ def mea_attention(q, k, v, *, causal=True, window=None, q_pos=None,
 def flash_attention(q, k, v, *, causal=True, window=None, q_pos=None,
                     k_len=None, pos_trivial=False, scale=None,
                     backend: str = "ref", cfg="auto", bwd_cfg="auto",
-                    bq: int = 128, bkv: int = 128):
+                    bq: int = 128, bkv: int = 128, global_stride=None,
+                    sparse: str = "auto", sparse_cfg="auto"):
     """Training/prefill attention dispatch.  q: (B,Sq,H,D);
     k, v: (B,Sk,Hkv,D) -> (B,Sq,H,D).
 
@@ -299,12 +300,65 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_pos=None,
       * ``k_len`` (valid-prefix masking against a padded cache) falls back
       * Sq/Sk must tile by the bq/bkv blocks (and the resolved degrees)
 
+    When a ``window`` is set (local-attention layers) and the geometry is
+    kernel-eligible, ``sparse="auto"`` routes to the BLOCK-SPARSE kernel
+    (`ops.flash_attention_sparse`): each q-block program walks only the kv
+    blocks its precomputed live index lists, so a long-context prefill
+    pays live traffic instead of the dense causal grid.  ``sparse="off"``
+    pins the dense-mask kernel.  ``global_stride=g`` adds LongFormer-style
+    global columns (every g-th kv position visible past the window) to the
+    pattern — only meaningful together with ``window``.  Backward through
+    the sparse path reuses the dense-mask backward kernels (identical
+    (m, l) residuals); a global-stride pattern differentiates the jnp
+    oracle instead — and when the sparse path is ineligible, a
+    global-stride pattern falls back to that oracle too, since neither the
+    dense kernel nor mea can express the strided columns.
+
     The kernel output is checkpoint-named "flash_attn_out" so the
     remat="dots" policy saves it instead of re-running the whole Pallas
     kernel in the backward.
     """
     b, sq, h, d = q.shape
     sk, hkv = k.shape[1], k.shape[2]
+    if (backend == "pallas" and sparse != "off" and k_len is None
+            and causal and window is not None and sq == sk and pos_trivial
+            and h % hkv == 0):
+        blk_q, blk_k = min(bq, sq), min(bkv, sk)
+        if sq % blk_q == 0 and sk % blk_k == 0:
+            from repro.core.coarsening import CoarseningConfig
+            from repro.kernels import ops
+            from repro.kernels.sparse_attention import max_live_blocks
+            ml = max_live_blocks(sq, sk, blk_q, blk_k, causal=True,
+                                 window=window, global_stride=global_stride)
+            rsp = sparse_cfg if isinstance(sparse_cfg, str) \
+                and sparse_cfg == "auto" \
+                else (sparse_cfg if isinstance(sparse_cfg, CoarseningConfig)
+                      else CoarseningConfig.parse(sparse_cfg))
+            # an explicit slot degree the padded index can't tile falls
+            # through to the dense path ("auto" legality guarantees a fit)
+            if rsp == "auto" or ml % rsp.degree == 0:
+                o = ops.flash_attention_sparse(
+                    q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), rsp, bwd_cfg=bwd_cfg,
+                    bq=blk_q, bkv=blk_k, causal=True, window=window,
+                    global_stride=global_stride, scale=scale)
+                from jax.ad_checkpoint import checkpoint_name
+                o = checkpoint_name(o, "flash_attn_out")
+                return o.transpose(0, 2, 1, 3).astype(q.dtype)
+    if (global_stride and window is not None and k_len is None
+            and sq == sk and (pos_trivial or q_pos is None)):
+        # the strided global columns exist in no other backend's mask:
+        # dense flash and mea would silently drop them — take the jnp
+        # oracle (dense cost, exact semantics).  Ragged positions (chunked
+        # prefill) keep the plain-window mea path below: the stride only
+        # defines extra VISIBLE columns, and chunked prefill already
+        # re-attends the full prefix per chunk.
+        from repro.kernels import ops
+        o = ops.flash_attention_sparse(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), backend="ref", causal=causal,
+            window=window, global_stride=global_stride, scale=scale)
+        return o.transpose(0, 2, 1, 3).astype(q.dtype)
     if backend == "pallas" and k_len is None:
         blk_q, blk_k = min(bq, sq), min(bkv, sk)
         ok = h % hkv == 0 and sq % blk_q == 0 and sk % blk_k == 0

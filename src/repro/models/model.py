@@ -356,10 +356,20 @@ def lm_init_cache(cfg: ModelConfig, b: int, s_max: int, dtype=jnp.bfloat16,
     }
     if cfg.is_encdec:
         el = enc_len or s_max
-        # per-layer cross K/V — stored stacked, consumed inside the scan
+        # per-layer cross K/V — stored stacked, consumed inside the scan.
+        # kv_quant="int8" quantizes this cache too: the encoder K/V is
+        # written once at prefill and read back every decode step, so it
+        # gets the same payload+scale split as the self-attn caches.
+        kvs = (n_periods, b, el, cfg.n_kv_heads)
         for c in cache["blocks"]:
-            c["enc_k"] = jnp.zeros((n_periods, b, el, cfg.n_kv_heads, cfg.hd), dtype)
-            c["enc_v"] = jnp.zeros((n_periods, b, el, cfg.n_kv_heads, cfg.hd), dtype)
+            if cfg.kv_quant == "int8":
+                c["enc_k"] = jnp.zeros(kvs + (cfg.hd,), jnp.int8)
+                c["enc_v"] = jnp.zeros(kvs + (cfg.hd,), jnp.int8)
+                c["enc_k_scale"] = jnp.zeros(kvs, jnp.float32)
+                c["enc_v_scale"] = jnp.zeros(kvs, jnp.float32)
+            else:
+                c["enc_k"] = jnp.zeros(kvs + (cfg.hd,), dtype)
+                c["enc_v"] = jnp.zeros(kvs + (cfg.hd,), dtype)
     return cache
 
 
@@ -550,10 +560,26 @@ def _prefill_enc_cache(params, batch, cfg, cache):
     ek = jnp.einsum("bsd,ldh->lbsh", enc_x, wk)
     ev = jnp.einsum("bsd,ldh->lbsh", enc_x, wv)
     np_, kvh, hd = ek.shape[0], cfg.n_kv_heads, cfg.hd
-    ek = ek.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_k"].dtype)
-    ev = ev.reshape(np_, bsz, s_src, kvh, hd).astype(blk["enc_v"].dtype)
-    blk = {**blk, "enc_k": blk["enc_k"].at[:, :, :s_src].set(ek),
-           "enc_v": blk["enc_v"].at[:, :, :s_src].set(ev)}
+    ek = ek.reshape(np_, bsz, s_src, kvh, hd)
+    ev = ev.reshape(np_, bsz, s_src, kvh, hd)
+    if "enc_k_scale" in blk:
+        # quantized cross cache: same quantize-on-append as the self-attn
+        # path, done once here since the encoder K/V never changes after
+        # prefill; rows past s_src keep payload 0 / scale 0 (dequant -> 0)
+        from repro.quant.qtypes import quantize_kv
+        ek, eks = quantize_kv(ek.astype(jnp.float32))
+        ev, evs = quantize_kv(ev.astype(jnp.float32))
+        blk = {**blk,
+               "enc_k": blk["enc_k"].at[:, :, :s_src].set(ek),
+               "enc_v": blk["enc_v"].at[:, :, :s_src].set(ev),
+               "enc_k_scale": blk["enc_k_scale"].at[:, :, :s_src].set(eks),
+               "enc_v_scale": blk["enc_v_scale"].at[:, :, :s_src].set(evs)}
+    else:
+        blk = {**blk,
+               "enc_k": blk["enc_k"].at[:, :, :s_src]
+                   .set(ek.astype(blk["enc_k"].dtype)),
+               "enc_v": blk["enc_v"].at[:, :, :s_src]
+                   .set(ev.astype(blk["enc_v"].dtype))}
     return {**cache, "blocks": [blk] + list(cache["blocks"][1:])}
 
 

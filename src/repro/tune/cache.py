@@ -32,7 +32,12 @@ from repro.core.coarsening import CoarseningConfig
 # (b, h, hkv, t, npp, d)) plus its cost model in core/analysis; the verify
 # terms also sharpened the decode-vs-verify crossover decode winners were
 # modeled against, so v3 files reload as empty.
-CACHE_VERSION = 4
+# v5: block-sparse long-context attention — the flash_attention_sparse
+# family (per-q-block live-KV index, live-slot coarsening; the sparsity
+# pattern — window/gstride/max_live — joins the spec key) plus
+# flash_attention_sparse_cost in core/analysis; v4 files reload as empty so
+# long-context prefill shapes re-rank against the sparse candidates.
+CACHE_VERSION = 5
 ENV_VAR = "REPRO_TUNE_CACHE"
 
 

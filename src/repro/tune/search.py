@@ -160,6 +160,20 @@ def enumerate_candidates(spec: KernelSpec,
             for kind, deg in _kind_degree_pairs(degrees):
                 if sq % (bq * deg) == 0:
                     out.append(CoarseningConfig(kind, deg))
+    elif fam == "flash_attention_sparse":
+        b, h, hkv, sq, sk, d = spec.shape
+        bq, bkv = p.get("bq", 128), p.get("bkv", 128)
+        # live-SLOT coarsening: each program owns `degree` slots of the
+        # NULL-padded per-q-block index (consecutive = adjacent slots,
+        # gapped = slots strided max_live/degree apart — physically both
+        # are `degree` index-resolved block loads per step), so the degree
+        # must divide the padded index width.  The builder pads max_live
+        # to a multiple of 8, which keeps every DEGREES entry legal.
+        ml = p.get("max_live", 8)
+        if sq % bq == 0 and sk % bkv == 0:
+            for kind, deg in _kind_degree_pairs(degrees):
+                if ml % deg == 0:
+                    out.append(CoarseningConfig(kind, deg))
     elif fam == "flash_attention_bwd":
         b, h, hkv, sq, sk, d = spec.shape
         bq, bkv = p.get("bq", 128), p.get("bkv", 128)
@@ -304,6 +318,13 @@ def model_cost(spec: KernelSpec, cfg: CoarseningConfig) -> float:
             b, h, hkv, sq, sk, d, cfg, bq=p.get("bq", 128),
             bkv=p.get("bkv", 128), causal=bool(p.get("causal", True)),
             dtype_bytes=dtb).modeled_s
+
+    if fam == "flash_attention_sparse":
+        b, h, hkv, sq, sk, d = spec.shape
+        return analysis.flash_attention_sparse_cost(
+            b, h, hkv, sq, sk, d, cfg, bq=p.get("bq", 128),
+            bkv=p.get("bkv", 128), max_live=p.get("max_live", 8),
+            n_live=p.get("n_live"), dtype_bytes=dtb).modeled_s
 
     if fam == "flash_attention_bwd":
         b, h, hkv, sq, sk, d = spec.shape

@@ -133,6 +133,21 @@ def warm_for_model(cfg, *, seq: int, batch: int,
             "decode_attention",
             (batch, cfg.n_heads, cfg.n_kv_heads, seq, cfg.hd),
             dtype="bfloat16", bkv=min(128, seq), window=cfg.window)
+        # local-layer prefill dispatches the block-sparse live-index
+        # kernel (layers.flash_attention sparse path) — warm its family at
+        # the exact pattern key the dispatch will resolve
+        bq_s, bkv_s = min(cfg.attn_bq, seq), min(cfg.attn_bkv, seq)
+        if seq % bq_s == 0 and seq % bkv_s == 0:
+            from repro.kernels.sparse_attention import build_block_index
+            gs = getattr(cfg, "attn_global_stride", None)
+            sidx = build_block_index(seq, seq, bq_s, bkv_s, causal=True,
+                                     window=cfg.window, global_stride=gs)
+            specs["flash_attention_sparse"] = KernelSpec.make(
+                "flash_attention_sparse",
+                (batch, cfg.n_heads, cfg.n_kv_heads, seq, seq, cfg.hd),
+                dtype="bfloat16", bq=bq_s, bkv=bkv_s, causal=True,
+                window=cfg.window, gstride=gs or 0,
+                max_live=int(sidx.shape[1]), n_live=int((sidx >= 0).sum()))
     if page_size:
         # paged serving: the block-table decode family at the per-slot page
         # budget (page size joins the spec key — different page sizes are
@@ -361,6 +376,19 @@ def wall_measurer(reps: int = 3):
                         bq=bq, bkv=bkv, causal=causal)),
                     argnums=(1, 2)))
                 fn = lambda: grad(q, kk, vv)
+        elif spec.family == "flash_attention_sparse":
+            b, h, hkv, sq, sk, d = spec.shape
+            dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32
+            q = jax.random.normal(key, (b, h, sq, d), dt) * 0.5
+            kk = jax.random.normal(jax.random.fold_in(key, 1),
+                                   (b, hkv, sk, d), dt) * 0.5
+            vv = jax.random.normal(jax.random.fold_in(key, 2),
+                                   (b, hkv, sk, d), dt)
+            fn = lambda: ops.flash_attention_sparse(
+                q, kk, vv, cfg, bq=p.get("bq", 128), bkv=p.get("bkv", 128),
+                causal=bool(p.get("causal", True)),
+                window=p.get("window") or None,
+                global_stride=p.get("gstride") or None)
         elif spec.family == "moe_ffn":
             e, cap, d, f = spec.shape
             dt = jnp.bfloat16 if spec.dtype == "bfloat16" else jnp.float32

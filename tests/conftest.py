@@ -18,6 +18,7 @@ def scratch_default_cache(tmp_path, monkeypatch):
         tune_cache._DEFAULT.clear()
         ops._auto_cfg.cache_clear()
         ops._flash_vjp_fn.cache_clear()
+        ops._flash_sparse_fn.cache_clear()
 
     wipe()
     yield str(tmp_path / "auto.json")

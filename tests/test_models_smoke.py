@@ -131,6 +131,37 @@ def test_mrope_positions_change_output():
     assert float(jnp.max(jnp.abs(ha - hb))) > 1e-4
 
 
+@pytest.mark.parametrize("arch", ["gemma3-1b", "recurrentgemma-2b"])
+def test_windowed_arch_sparse_backend_matches_ref(arch,
+                                                  scratch_default_cache):
+    """The windowed architectures default to attn_sparse="auto": under
+    attn_backend="pallas" their local-attention prefill routes the
+    block-sparse live-index kernel, which must track the ref path at bf16
+    tolerance; attn_sparse="off" (dense-mask kernel) must agree too, and
+    attn_global_stride must actually change the pattern."""
+    import dataclasses
+    from repro.tune.cache import default_cache
+    base = get_config(arch).reduced()
+    assert base.attn_sparse == "auto" and base.window
+    params = M.lm_init(KEY, base)
+    tok = jax.random.randint(jax.random.PRNGKey(6), (1, 32), 0, base.vocab)
+    want, _ = M.lm_apply(params, {"tokens": tok},
+                         dataclasses.replace(base, attn_backend="ref"))
+    want = np.asarray(want, np.float32)
+    for sparse in ("auto", "off"):
+        cfg = dataclasses.replace(base, attn_backend="pallas",
+                                  attn_sparse=sparse)
+        got, _ = M.lm_apply(params, {"tokens": tok}, cfg)
+        d = float(np.abs(np.asarray(got, np.float32) - want).max())
+        assert d < 0.25, (sparse, d)
+    fams = {key.split("|", 1)[0] for key in default_cache().entries}
+    assert "flash_attention_sparse" in fams
+    gcfg = dataclasses.replace(base, attn_backend="pallas",
+                               attn_global_stride=8)
+    hg, _ = M.lm_apply(params, {"tokens": tok}, gcfg)
+    assert float(np.abs(np.asarray(hg, np.float32) - want).max()) > 1e-5
+
+
 def test_local_vs_global_attention_differs():
     cfg = get_config("gemma3-1b").reduced(window=4)
     params = M.lm_init(KEY, cfg)

@@ -427,6 +427,50 @@ def test_encdec_quantized_prefill_close_to_f32(scratch_default_cache):
                         - np.asarray(h_want, np.float32)).max()) < 0.25
 
 
+def test_encdec_int8_cross_cache_parity(scratch_default_cache):
+    """kv_quant="int8" on an enc-dec model quantizes the CROSS cache too:
+    int8 payloads + per-(token, kv-head) f32 scales, written once at encoder
+    prefill (_prefill_enc_cache) and dequantized on every cross-attention
+    read.  Prefill + decode logits must track the dense-cache path within
+    int8 round-trip error, and the scale leaves must survive the decode
+    cache carry."""
+    base = get_config("seamless-m4t-large-v2").reduced()
+    qcfg = dataclasses.replace(base, kv_quant="int8")
+    params = M.lm_init(KEY, base)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 5), (2, 8), 1,
+                              base.vocab)
+    frames = jax.random.normal(jax.random.fold_in(KEY, 6),
+                               (2, 16, base.d_model)) * 0.1
+    batch = {"tokens": toks, "src_frames": frames}
+
+    c = M.lm_init_cache(qcfg, 2, 32)
+    assert c["blocks"][0]["enc_k"].dtype == jnp.int8
+    assert c["blocks"][0]["enc_k_scale"].dtype == jnp.float32
+    assert (c["blocks"][0]["enc_k_scale"].shape
+            == c["blocks"][0]["enc_k"].shape[:-1])
+
+    outs = {}
+    for name, cfg in (("dense", base), ("int8", qcfg)):
+        logits, cache = M.lm_prefill(params, batch, cfg, s_max=32)
+        if name == "int8":
+            blk = cache["blocks"][0]
+            assert blk["enc_k"].dtype == jnp.int8
+            # the encoder K/V really was quantized (non-trivial scales)
+            assert float(jnp.abs(blk["enc_k_scale"]).max()) > 0
+        pos = jnp.full((2,), toks.shape[1], jnp.int32)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        seq = [logits]
+        for _ in range(3):
+            lg, cache = M.lm_decode_step(params, cache, tok, pos, cfg)
+            seq.append(lg)
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+            pos = pos + 1
+        outs[name] = seq
+    for a, b in zip(outs["dense"], outs["int8"]):
+        d = float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        assert d < 0.05, d
+
+
 def test_batched_server_quant_smoke(scratch_default_cache):
     """BatchedServer end-to-end with --quant int8 --kv-quant int8: runs to
     completion and reports the memory saving."""

@@ -218,6 +218,34 @@ def test_verify_family_picks_its_own_degree():
     assert ver.best.degree not in (dec.best.degree, pre.best.degree)
 
 
+def test_sparse_family_picks_its_own_degree():
+    """The block-sparse family coarsens the LIVE-SLOT axis, so its degree
+    legality (max_live % deg == 0) is independent of sequence length —
+    unlike the dense family, whose q-row coarsening needs sq % (bq*deg)
+    == 0.  At a 33280-token window=512 prefill (260 q-blocks, not
+    divisible by 8) dense con8 is illegal, so the two families MUST split:
+    sparse rides the padded 8-slot live list at con8 while dense stops at
+    con4.  Geometry shared with benchmarks/sparse_attention.py."""
+    from repro.kernels.sparse_attention import build_block_index
+    b, h, hkv, d = 1, 4, 1, 256
+    s, bq, bkv, w = 33280, 128, 128, 512
+    idx = build_block_index(s, s, bq, bkv, causal=True, window=w)
+    ml, nl = int(idx.shape[1]), int((idx >= 0).sum())
+    sp = search(KernelSpec.make("flash_attention_sparse",
+                                (b, h, hkv, s, s, d), dtype="bfloat16",
+                                bq=bq, bkv=bkv, causal=True, window=w,
+                                gstride=0, max_live=ml, n_live=nl))
+    dn = search(KernelSpec.make("flash_attention", (b, h, hkv, s, s, d),
+                                dtype="bfloat16", causal=True, window=0,
+                                bq=bq, bkv=bkv))
+    assert sp.best.label == "con8"
+    assert dn.best.label == "con4"
+    # the criterion proper: the sparse family's winner differs from dense
+    assert sp.best.degree != dn.best.degree
+    # and no dense candidate at degree 8 was even legal at this sq
+    assert all(c.cfg.degree != 8 for c in dn.candidates)
+
+
 def test_ops_auto_ref_backend_skips_tuning():
     a = jax.random.normal(jax.random.PRNGKey(2), (64, 64))
     b = jax.random.normal(jax.random.PRNGKey(3), (64, 64))
