@@ -30,6 +30,10 @@ Tables (one per paper figure):
            visits and modeled cost vs the dense causal grid across 4k-64k
            contexts, the two families' distinct winners at the pinned
            shape, and the gemma3-1b shrink 8k-context CI smoke
+  robustness — serving under pressure: swap-resume vs recompute eviction
+           (recovered vs re-prefilled tokens, gate recovery_x >= 2),
+           goodput under deadline load, suspend/resume overhead, and a
+           seeded fault-injection trace pinned bitwise to the clean run
 
 --json additionally writes each selected table's rows to
 experiments/BENCH_<name>.json as an append-only trajectory artifact, so
@@ -45,7 +49,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import (fig8_apps, fig10_mem_divergence, fig11_ai,
                         fig12_cache, fig13_divdeg, collectives_coarsening,
                         roofline, tuned, decode, moe, attention, quant,
-                        paging, specdecode, sparse_attention)
+                        paging, specdecode, sparse_attention, robustness)
 from benchmarks.common import ROWS
 
 TABLES = {
@@ -64,6 +68,7 @@ TABLES = {
     "paging": paging.main,
     "specdecode": specdecode.main,
     "sparse_attention": sparse_attention.main,
+    "robustness": robustness.main,
 }
 
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")

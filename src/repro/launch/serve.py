@@ -40,6 +40,14 @@ driver reports the acceptance rate next to tok/s.
 
   PYTHONPATH=src python -m repro.launch.serve --cache paged --num-pages 24 \
       --page-size 16 --slots 4 --requests 8 --gen-tokens 16
+
+Robustness (paged only): ``--host-swap-mib`` bounds the host budget for
+swap-out eviction (suspend/resume instead of recompute), ``--deadline`` /
+``--max-queue-wait`` / ``--max-waiting`` set the cancellation and
+backpressure contract, and ``--fault-seed --fault-admit/-decode/-transient/
+-nan`` run the whole trace under deterministic fault injection
+(repro.serve.faults) — completed outputs stay bitwise identical and a page
+leak assertion runs at shutdown.  Ctrl-C drains gracefully on both paths.
 """
 from __future__ import annotations
 
@@ -248,7 +256,8 @@ class BatchedServer:
 def _serve_paged(args, cfg, params, rng) -> None:
     """Streaming front-end over the paged engine: submit the request trace
     to the Scheduler and let it admit / preempt / retire against the pool."""
-    from repro.serve import PagedEngine, Scheduler, SpecPagedEngine, draft_of
+    from repro.serve import (FaultPlan, FaultyEngine, PagedEngine, Scheduler,
+                             SpecPagedEngine, State, draft_of)
 
     num_pages = args.num_pages if args.num_pages is not None else \
         args.slots * -(-args.max_len // args.page_size) + 1
@@ -276,19 +285,52 @@ def _serve_paged(args, cfg, params, rng) -> None:
     else:
         engine = PagedEngine(cfg, params, decode_block=args.decode_block,
                              **kw)
-    sched = Scheduler(engine)
+    plan = None
+    front = engine
+    if any((args.fault_admit, args.fault_decode, args.fault_transient,
+            args.fault_nan)):
+        plan = FaultPlan(args.fault_seed, p_admit=args.fault_admit,
+                         p_growth=args.fault_decode,
+                         p_transient=args.fault_transient,
+                         p_nan=args.fault_nan)
+        front = FaultyEngine(engine, plan)
+    swap_bytes = None if args.host_swap_mib is None \
+        else int(args.host_swap_mib * 2**20)
+    sched = Scheduler(front, host_swap_bytes=swap_bytes,
+                      max_waiting=args.max_waiting)
     for _ in range(args.requests):
         sched.submit(list(rng.integers(1, cfg.vocab, args.prompt_len)),
-                     args.gen_tokens)
+                     args.gen_tokens, deadline=args.deadline,
+                     max_queue_wait=args.max_queue_wait)
     t0 = time.perf_counter()
-    done = sched.run_until_done()
+    try:
+        done = sched.run_until_done()
+    except KeyboardInterrupt:
+        # graceful drain: cancel everything in flight, free its pages,
+        # then fall through to the same stats + leak check as a full run
+        done = sched.drain(reason="interrupted")
+        print(f"\ninterrupted — drained {len(done)} requests")
     dt = time.perf_counter() - t0
+    # shutdown leak assertion: every page is either free or live-refcounted
+    engine.pool.check()
+    assert engine.pool.num_free + engine.pool.num_live \
+        == engine.pool.capacity, "page leak at shutdown"
     npre = sum(r.preemptions for r in done)
     total = args.requests * (args.prompt_len + args.gen_tokens)
     print(f"served {len(done)} requests / {total} tokens (paged: "
           f"{engine.pool.capacity} pages x {engine.page_size} tok) in "
           f"{engine.prefill_steps} prefill + {engine.decode_steps} decode "
           f"model steps, {npre} preemptions, {dt:.2f}s")
+    by_state = {s.value: n for s in State
+                if (n := sum(r.state is s for r in done))}
+    print(f"robustness: states {by_state} | swap-evictions "
+          f"{engine.suspends} (resumed {engine.resumes}, "
+          f"{sched.swap.used_bytes / 2**20:.2f} MiB held, "
+          f"{sched.swap.refused} over-budget refusals) | "
+          f"decode faults {sched.decode_faults}, NaN rescues "
+          f"{engine.nan_rescues}")
+    if plan is not None:
+        print(f"fault injection: {plan.stats()}")
     print(f"prefill: {engine.prefill_tokens} tok in {engine.prefill_s:.2f}s "
           f"({engine.prefill_tokens / max(engine.prefill_s, 1e-9):.1f} tok/s)"
           f" | decode: {engine.decoded_tokens} tok in {engine.decode_s:.2f}s "
@@ -360,6 +402,36 @@ def main():
                     help="draft model for --spec-k: an arch name, 'self' "
                          "(draft = target, the acceptance upper bound), or "
                          "unset for the default draft_of() shrink")
+    ap.add_argument("--host-swap-mib", type=float, default=None,
+                    help="paged: host budget (MiB) for swap-out of preempted "
+                         "slots; within budget, eviction suspends to host "
+                         "and resumes without re-prefill (unset = unbounded, "
+                         "0 = always recompute)")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="paged: cancel any request still unfinished after "
+                         "this many scheduler quanta (terminal CANCELLED, "
+                         "pages freed)")
+    ap.add_argument("--max-queue-wait", type=int, default=None,
+                    help="paged: reject a request that waits more quanta "
+                         "than this between admissions (terminal REJECTED "
+                         "with a retry-after hint)")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="paged: backpressure bound on the wait queue; "
+                         "submits past it are shed with REJECTED")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault-injection plan (see repro."
+                         "serve.faults); faults fire only when a --fault-* "
+                         "probability is set")
+    ap.add_argument("--fault-admit", type=float, default=0.0,
+                    help="P(injected PoolExhausted) per admit call")
+    ap.add_argument("--fault-decode", type=float, default=0.0,
+                    help="P(injected PoolExhausted page-growth failure) per "
+                         "decode call")
+    ap.add_argument("--fault-transient", type=float, default=0.0,
+                    help="P(injected transient DecodeFault) per decode call")
+    ap.add_argument("--fault-nan", type=float, default=0.0,
+                    help="P(NaN-poisoned logits row) per emitted row "
+                         "(exercises the NaN guard + decode-graph rescue)")
     args = ap.parse_args()
     if args.spec_k and args.cache != "paged":
         ap.error("--spec-k needs --cache paged (the draft KV cache and "
@@ -383,12 +455,21 @@ def main():
     pending = [list(rng.integers(1, cfg.vocab, args.prompt_len))
                for _ in range(args.requests)]
     t0 = time.perf_counter()
-    while pending or server.any_active:
-        while pending and server.try_admit(pending[0], args.gen_tokens):
-            pending.pop(0)
-        if not server.any_active:
-            break
-        server.step()
+    try:
+        while pending or server.any_active:
+            while pending and server.try_admit(pending[0], args.gen_tokens):
+                pending.pop(0)
+            if not server.any_active:
+                break
+            server.step()
+    except KeyboardInterrupt:
+        # graceful drain: archive in-flight partial outputs, then fall
+        # through to the normal stats so the run is still accounted for
+        for s in np.flatnonzero(server.active):
+            server.active[s] = False
+            server.completed.append(list(server.outputs[s]))
+        print(f"\ninterrupted — {len(pending)} requests unserved, "
+              f"{len(server.completed)} archived (partial output kept)")
     dt = time.perf_counter() - t0
     total_tokens = args.requests * (args.prompt_len + args.gen_tokens)
     print(f"served {args.requests} requests / {total_tokens} tokens in "

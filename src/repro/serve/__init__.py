@@ -10,13 +10,20 @@
 ``spec``       — SpecPagedEngine: speculative decoding (draft-K proposals,
                  one batched verify pass through the short-q coarsened
                  kernel, paged rollback of rejected rows).
+``faults``     — deterministic fault injection (seeded FaultPlan wrapping
+                 any engine): executable robustness claims — injected
+                 PoolExhausted / DecodeFault / NaN logits must leave
+                 completed outputs bitwise identical to a fault-free run.
 """
-from repro.serve.engine import PagedEngine
-from repro.serve.paging import (NULL_PAGE, BlockTables, PagePool,
-                                PoolExhausted, pages_needed)
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.engine import PagedEngine, Suspension
+from repro.serve.faults import FaultPlan, FaultyEngine
+from repro.serve.paging import (NULL_PAGE, BlockTables, DecodeFault,
+                                PagePool, PoolExhausted, SwapStore,
+                                pages_needed)
+from repro.serve.scheduler import Request, Scheduler, State
 from repro.serve.spec import SpecPagedEngine, draft_of
 
-__all__ = ["NULL_PAGE", "BlockTables", "PagePool", "PoolExhausted",
-           "PagedEngine", "SpecPagedEngine", "draft_of", "pages_needed",
-           "Request", "Scheduler"]
+__all__ = ["NULL_PAGE", "BlockTables", "DecodeFault", "FaultPlan",
+           "FaultyEngine", "PagePool", "PoolExhausted", "PagedEngine",
+           "SpecPagedEngine", "State", "Suspension", "SwapStore",
+           "draft_of", "pages_needed", "Request", "Scheduler"]

@@ -40,8 +40,30 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig, ATTN_GLOBAL, ATTN_LOCAL
-from repro.serve.paging import (BlockTables, PagePool, PoolExhausted,
-                                pages_needed)
+from repro.serve.paging import (BlockTables, DecodeFault, PagePool,
+                                PoolExhausted, pages_needed)
+
+
+@dataclasses.dataclass
+class Suspension:
+    """Host-resident snapshot of one suspended slot: the page rows its block
+    table covered (gathered off-device), the non-paged per-slot state, and
+    the generation cursor.  ``resume`` restores all of it into freshly
+    allocated pages WITHOUT re-running prefill — the whole point of
+    swap-preemption over recompute-preemption."""
+    n_tokens: int           # cache rows live at suspend (= written)
+    n_pages: int            # pages the snapshot covers
+    last: int               # last sampled token
+    remaining: int          # gen tokens left
+    pages: Any              # {"blocks": [...], "tail": [...]} page gathers
+    state: Any              # non-paged per-slot snapshot (recurrent/SSM)
+    nbytes: int = 0
+
+    def __post_init__(self):
+        if not self.nbytes:
+            self.nbytes = sum(
+                int(a.nbytes) for a in jax.tree.leaves(
+                    (self.pages, self.state)))
 
 
 @dataclasses.dataclass
@@ -118,7 +140,12 @@ class PagedEngine:
         self.prefill_steps = self.decode_steps = 0
         self.prefill_tokens = self.decoded_tokens = 0
         self.prefill_s = self.decode_s = 0.0
+        self.suspends = self.resumes = 0
+        self.swapped_out_tokens = 0     # cache rows carried across suspends
+        self.nan_rescues = 0            # decode blocks re-run by the guard
+        self.fault_hook = None          # repro.serve.faults sets this
         self._attn_kinds = self._kind_flags(cfg)
+        self._swap_page_bytes, self._swap_fixed_bytes = self._swap_layout()
         self._prefill = jax.jit(
             lambda p, c, t, po, m, bt: M.lm_prefill(
                 p, {"tokens": t}, cfg, cache=c, pos0=po, mask=m,
@@ -182,6 +209,112 @@ class PagedEngine:
             for c, sc, is_attn in zip(self.cache["tail"],
                                       snap["tail"], tail_attn)]
         self.cache = {"blocks": blocks, "tail": tail}
+
+    # -- resumable preemption: host swap of a slot's live pages -------------
+
+    def _swap_layout(self) -> tuple[int, int]:
+        """(bytes per swapped page, fixed per-slot bytes): paged leaves
+        charge their page-axis row (axis 1 under the period stack, axis 0
+        in the tail), non-paged leaves their slot row."""
+        blk_attn, tail_attn = self._attn_kinds
+        per_page = fixed = 0
+        for c, attn in zip(self.cache["blocks"], blk_attn):
+            for a in jax.tree.leaves(c):
+                (per_page, fixed) = (per_page + a.nbytes // a.shape[1], fixed) \
+                    if attn else (per_page, fixed + a.nbytes // a.shape[1])
+        for c, attn in zip(self.cache["tail"], tail_attn):
+            for a in jax.tree.leaves(c):
+                (per_page, fixed) = (per_page + a.nbytes // a.shape[0], fixed) \
+                    if attn else (per_page, fixed + a.nbytes // a.shape[0])
+        return per_page, fixed
+
+    def suspend_bytes(self, slot: int) -> int:
+        """Host bytes suspend(slot) would take — the scheduler's swap-vs-
+        recompute policy checks this against its SwapStore budget BEFORE
+        deciding how to evict."""
+        return self._swap_fixed_bytes + self._swap_page_bytes \
+            * pages_needed(int(self.written[slot]), self.page_size)
+
+    def _gather_pages(self, idx):
+        """Copy the page-axis rows ``idx`` of every PAGED cache leaf to host
+        memory; non-paged leaves map to None (the slot snapshot covers
+        them).  SpecPagedEngine extends this with the draft pools."""
+        i = jnp.asarray(idx, jnp.int32)
+        blk_attn, tail_attn = self._attn_kinds
+        return {
+            "blocks": [jax.tree.map(lambda a: np.asarray(a[:, i]), c)
+                       if attn else None
+                       for c, attn in zip(self.cache["blocks"], blk_attn)],
+            "tail": [jax.tree.map(lambda a: np.asarray(a[i]), c)
+                     if attn else None
+                     for c, attn in zip(self.cache["tail"], tail_attn)],
+        }
+
+    def _scatter_pages(self, idx, saved) -> None:
+        """Write a _gather_pages snapshot back at (freshly allocated) page
+        ids ``idx`` — the resume half of the swap."""
+        i = jnp.asarray(idx, jnp.int32)
+        self.cache = {
+            "blocks": [c if sv is None else jax.tree.map(
+                lambda a, v: a.at[:, i].set(v), c, sv)
+                for c, sv in zip(self.cache["blocks"], saved["blocks"])],
+            "tail": [c if sv is None else jax.tree.map(
+                lambda a, v: a.at[i].set(v), c, sv)
+                for c, sv in zip(self.cache["tail"], saved["tail"])],
+        }
+
+    def suspend(self, slot: int) -> Suspension:
+        """Swap a running slot's state to host and free its device pages.
+        Unlike ``preempt``, NO work is lost: ``resume`` restores the cache
+        rows bitwise, so generation continues exactly where it stopped
+        without re-running prefill.  Shared-prefix pages are copied too
+        (they resume as private pages — sharing is not re-established)."""
+        if not self.active[slot]:
+            raise RuntimeError(f"suspend of inactive slot {slot}")
+        n_tok = int(self.written[slot])
+        # decode may have grown the table past the written rows before an
+        # exhaustion elsewhere aborted the step; rows >= written are always
+        # rewritten before any read, so only the covering pages swap out
+        self.pool.release(self.bt.truncate(
+            slot, pages_needed(n_tok, self.page_size)))
+        pages = list(self.bt[slot])
+        # the slot snapshot passes attention entries through by reference
+        # (they live in the paged pools, gathered above) — null them so
+        # only the non-paged per-slot rows copy to host
+        snap, (blk_attn, tail_attn) = self._slot_snapshot(slot), \
+            self._attn_kinds
+        state = {
+            "blocks": [None if attn else jax.tree.map(np.asarray, c)
+                       for c, attn in zip(snap["blocks"], blk_attn)],
+            "tail": [None if attn else jax.tree.map(np.asarray, c)
+                     for c, attn in zip(snap["tail"], tail_attn)],
+        }
+        susp = Suspension(
+            n_tokens=n_tok, n_pages=len(pages), last=int(self.last[slot]),
+            remaining=int(self.remaining[slot]),
+            pages=self._gather_pages(pages), state=state)
+        self._drop(slot)
+        self.suspends += 1
+        self.swapped_out_tokens += n_tok
+        return susp
+
+    def resume(self, slot: int, susp: Suspension) -> None:
+        """Restore a suspension into freshly allocated pages.  Raises
+        PoolExhausted with NO partial effects when the pool cannot serve
+        the allocation right now (the caller keeps the suspension and
+        retries later).  Runs zero prefill steps."""
+        if self.active[slot]:
+            raise RuntimeError(f"slot {slot} is already running")
+        fresh = self.pool.alloc(susp.n_pages)   # raises, no side effects
+        self.bt.append(slot, fresh)
+        self._scatter_pages(fresh, susp.pages)
+        self._slot_reset(slot)
+        self._slot_load(slot, susp.state)
+        self.active[slot] = True
+        self.written[slot] = susp.n_tokens
+        self.last[slot] = susp.last
+        self.remaining[slot] = susp.remaining
+        self.resumes += 1
 
     # -- prefill ------------------------------------------------------------
 
@@ -261,11 +394,13 @@ class PagedEngine:
                 logits, cache = M.lm_decode_step(params, cache, tok, pos,
                                                  cfg, block_table=bt)
                 nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-                return (nxt[:, None], pos + 1, cache), nxt
+                return (nxt[:, None], pos + 1, cache), (nxt, logits)
 
-            (_, _, cache), toks = jax.lax.scan(
+            (_, _, cache), (toks, lgs) = jax.lax.scan(
                 body, (tok, pos, cache), jnp.arange(n))
-            return toks.T, cache                         # (slots, n)
+            # (slots, n) tokens + (slots, n, V) per-step logits: the host-
+            # visible logits feed the NaN guard below
+            return toks.T, jnp.moveaxis(lgs, 0, 1), cache
 
         fn = self._decode_fns[n] = jax.jit(run)
         return fn
@@ -274,7 +409,16 @@ class PagedEngine:
         """Run a decode block for the running ``slots``; returns the new
         greedy tokens per slot.  Page growth happens BEFORE the launch;
         PoolExhausted propagates to the scheduler (slots whose growth
-        already succeeded keep their pages — consistent, not leaked)."""
+        already succeeded keep their pages — consistent, not leaked).
+
+        NaN guard: a step whose host-visible logits hold a NaN row (a
+        transient fault — the injection harness poisons exactly here) is
+        DISCARDED and re-run through the SAME jitted function: the rewrite
+        of cache rows [written, written+n) is bitwise idempotent (same
+        graph, same inputs; stale rows past ``written`` are pos-masked), so
+        a rescued block's tokens are exactly the fault-free ones.  Retries
+        are bounded; exhaustion raises DecodeFault with the per-slot
+        cursors unadvanced (the scheduler retries the quantum)."""
         slots = [s for s in slots if self.active[s]]
         if not slots:
             return {}
@@ -288,11 +432,28 @@ class PagedEngine:
         tokens = np.zeros((self.slots, 1), np.int32)
         tokens[slots, 0] = self.last[slots]
         t0 = time.perf_counter()
-        toks, self.cache = self._decode_fn(n)(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.written, jnp.int32),
-            self._device_table(self.active))
-        toks = np.asarray(toks)
+
+        def launch():
+            toks, lgs, self.cache = self._decode_fn(n)(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.written, jnp.int32),
+                self._device_table(self.active))
+            lg = np.asarray(lgs)
+            if self.fault_hook is not None:
+                lg = self.fault_hook.corrupt_logits(lg, site="decode")
+            return np.asarray(toks), lg
+
+        toks, lg = launch()
+        retries = 0
+        while np.isnan(lg[slots]).any():
+            retries += 1
+            if retries > 4:
+                self.decode_s += time.perf_counter() - t0
+                raise DecodeFault(
+                    f"non-finite logits persisted through {retries - 1} "
+                    f"rescue re-runs")
+            self.nan_rescues += 1
+            toks, lg = launch()
         self.decode_s += time.perf_counter() - t0
         self.decode_steps += n
         self.decoded_tokens += n * len(slots)

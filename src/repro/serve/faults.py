@@ -1,0 +1,145 @@
+"""Deterministic fault injection for the serving stack.
+
+The robustness claims of the scheduler/engine pair (no partial effects on
+``PoolExhausted``, retry-safe ``DecodeFault``, NaN-guarded logits, no page
+leaks, bitwise-identical completed outputs) are only worth stating if they
+are *executable*.  This module makes them so: ``FaultyEngine`` wraps any
+engine behind the scheduler protocol and injects failures from a seeded
+``FaultPlan`` — the same seed always produces the same fault trace, so a
+failing run is replayable and CI can pin exact outcomes.
+
+Three injection sites, chosen because they are the three places the real
+stack can fail:
+
+* ``admit`` — ``PoolExhausted`` raised *before* the engine is touched
+  (models allocation failure; the no-partial-effects contract means the
+  wrapper needs no cleanup).
+* ``decode`` — either ``PoolExhausted`` (models page growth failing
+  mid-step; triggers the scheduler's eviction path) or ``DecodeFault``
+  (models a transient device fault; the scheduler retries the quantum).
+  Both raise before delegation, so no cursor advances.
+* logits — the engine itself calls ``plan.corrupt_logits`` on the
+  host-visible logits between device transfer and token emission
+  (``engine.fault_hook``), poisoning whole rows with NaN.  This exercises
+  the NaN guard + decode-graph rescue: the engine re-runs the SAME jitted
+  step (idempotent by the rows>=written-are-rewritten invariant), so the
+  rescued tokens are bitwise those of a fault-free run.
+
+Because every injected fault is either raised before any state change or
+rescued by re-running an idempotent graph, a run under *any* FaultPlan must
+complete with outputs bitwise identical to the fault-free run — that
+equality is asserted in tests/test_faults.py and the CI smoke step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.paging import DecodeFault, PoolExhausted
+
+
+class FaultPlan:
+    """A seeded schedule of failures.
+
+    Probabilities are per *opportunity* (one admit call, one decode call,
+    one logits row).  ``max_faults`` bounds the total injections so a hot
+    plan cannot livelock a request past the scheduler's retry budgets —
+    after the bound, the plan goes quiet and the run completes.
+    """
+
+    def __init__(self, seed: int, *, p_admit: float = 0.0,
+                 p_growth: float = 0.0, p_transient: float = 0.0,
+                 p_nan: float = 0.0, max_faults: int | None = 50):
+        for name, p in (("p_admit", p_admit), ("p_growth", p_growth),
+                        ("p_transient", p_transient), ("p_nan", p_nan)):
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} is not a probability")
+        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.p_admit = p_admit
+        self.p_growth = p_growth
+        self.p_transient = p_transient
+        self.p_nan = p_nan
+        self.max_faults = max_faults
+        self.admit_faults = 0
+        self.growth_faults = 0
+        self.transient_faults = 0
+        self.nan_rows = 0
+
+    @property
+    def total(self) -> int:
+        return (self.admit_faults + self.growth_faults
+                + self.transient_faults + self.nan_rows)
+
+    def _armed(self) -> bool:
+        return self.max_faults is None or self.total < self.max_faults
+
+    def _fire(self, p: float) -> bool:
+        # always draw, so the rng stream (and thus the trace) depends only
+        # on the seed and the opportunity sequence, not on max_faults
+        return (self.rng.random() < p) and self._armed()
+
+    # -- sites ---------------------------------------------------------------
+
+    def on_admit(self) -> None:
+        if self._fire(self.p_admit):
+            self.admit_faults += 1
+            raise PoolExhausted(
+                f"[injected seed={self.seed}] admit allocation failure")
+
+    def on_decode(self) -> None:
+        if self._fire(self.p_growth):
+            self.growth_faults += 1
+            raise PoolExhausted(
+                f"[injected seed={self.seed}] page growth failure")
+        if self._fire(self.p_transient):
+            self.transient_faults += 1
+            raise DecodeFault(
+                f"[injected seed={self.seed}] transient decode fault")
+
+    def corrupt_logits(self, lg: np.ndarray, site: str) -> np.ndarray:
+        """Poison whole logit rows with NaN, in place.  ``lg`` is the
+        host-side copy the engine is about to emit tokens from — the device
+        cache is untouched, which is exactly the failure the NaN guard is
+        built for.  Rows are the leading axes (everything but vocab)."""
+        if self.p_nan <= 0.0:
+            return lg
+        hit = self.rng.random(lg.size // lg.shape[-1]) < self.p_nan
+        if self._armed() and hit.any():
+            if not lg.flags.writeable:    # np.asarray of a device array
+                lg = lg.copy()
+            lg.reshape(-1, lg.shape[-1])[hit] = np.nan
+            self.nan_rows += int(hit.sum())
+        return lg
+
+    def stats(self) -> dict:
+        return {"seed": self.seed, "admit_faults": self.admit_faults,
+                "growth_faults": self.growth_faults,
+                "transient_faults": self.transient_faults,
+                "nan_rows": self.nan_rows}
+
+
+class FaultyEngine:
+    """Engine wrapper injecting a FaultPlan at the protocol boundary.
+
+    Everything not intercepted (finish/preempt/suspend/resume/attribute
+    reads) forwards to the wrapped engine, so the scheduler cannot tell the
+    difference — including ``hasattr(engine, "suspend")`` for the swap
+    policy.  The wrapper also arms the engine's ``fault_hook`` so the
+    logits site fires inside the engine's own guard loop.
+    """
+
+    def __init__(self, engine, plan: FaultPlan):
+        self._engine = engine
+        self.plan = plan
+        engine.fault_hook = plan
+
+    def admit(self, slot, request):
+        self.plan.on_admit()
+        return self._engine.admit(slot, request)
+
+    def decode(self, slots):
+        self.plan.on_decode()
+        return self._engine.decode(slots)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)

@@ -35,7 +35,18 @@ NULL_PAGE = 0
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation cannot be served; the scheduler reacts by
-    preempting (requeue-with-cache-drop) rather than crashing the server."""
+    evicting a running request (host-swap or requeue-with-cache-drop)
+    rather than crashing the server."""
+
+
+class DecodeFault(RuntimeError):
+    """A transient decode-step failure: when this raises, no generation
+    cursor has advanced and the pool is consistent (pages grown for the
+    aborted step stay accounted in their tables — same contract as
+    PoolExhausted mid-growth), so the scheduler can simply retry the
+    quantum.  Raised by the fault-injection harness (repro.serve.faults)
+    and by the engine itself when the NaN-logit guard exhausts its rescue
+    retries."""
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -192,3 +203,73 @@ class BlockTables:
             for p in t:
                 own.setdefault(p, []).append(s)
         return own
+
+
+class SwapStore:
+    """Host-side bookkeeping for swapped-out (suspended) slot state.
+
+    The scheduler's swap-vs-recompute policy is "swap when the suspended
+    bytes fit the host budget, recompute otherwise"; this store IS that
+    budget.  It never touches device memory — it holds whatever opaque
+    suspension object the engine hands back, keyed by request id, and
+    accounts bytes against ``budget_bytes`` (None = unbounded).
+
+    Invariant (check()): ``used_bytes`` equals the sum of the stored
+    entries' sizes, and never exceeds the budget.
+    """
+
+    def __init__(self, budget_bytes: int | None = None):
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self._entries: dict[int, tuple] = {}    # rid -> (susp, nbytes)
+        self.used_bytes = 0
+        self.swapped_out = 0        # lifetime puts
+        self.swapped_in = 0         # lifetime pops (resumes)
+        self.dropped = 0            # cancelled while suspended
+        self.refused = 0            # policy said recompute (over budget)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    def fits(self, nbytes: int) -> bool:
+        """Would ``nbytes`` more fit the budget?  A refusal is counted so
+        the policy split is observable in serving stats."""
+        ok = self.budget_bytes is None \
+            or self.used_bytes + nbytes <= self.budget_bytes
+        if not ok:
+            self.refused += 1
+        return ok
+
+    def put(self, rid: int, susp, nbytes: int) -> None:
+        if rid in self._entries:
+            raise ValueError(f"request {rid} is already swapped out")
+        self._entries[rid] = (susp, int(nbytes))
+        self.used_bytes += int(nbytes)
+        self.swapped_out += 1
+
+    def peek(self, rid: int):
+        """The stored suspension, NOT removed — resume may still fail with
+        PoolExhausted, in which case the entry must survive."""
+        return self._entries[rid][0]
+
+    def pop(self, rid: int):
+        """Remove after a successful resume."""
+        susp, nbytes = self._entries.pop(rid)
+        self.used_bytes -= nbytes
+        self.swapped_in += 1
+        return susp
+
+    def drop(self, rid: int) -> None:
+        """Discard a suspension whose request was cancelled/failed."""
+        _, nbytes = self._entries.pop(rid)
+        self.used_bytes -= nbytes
+        self.dropped += 1
+
+    def check(self) -> None:
+        assert self.used_bytes == sum(n for _, n in self._entries.values())
+        assert self.budget_bytes is None \
+            or self.used_bytes <= self.budget_bytes, "swap budget exceeded"

@@ -128,11 +128,15 @@ class SpecPagedEngine(PagedEngine):
             int(x.size) * jnp.dtype(x.dtype).itemsize
             for x in jax.tree.leaves(self.draft_cache)) / 2**20
 
+        # the draft pools swap out with the target's (shared page-id space)
+        self._swap_page_bytes, self._swap_fixed_bytes = self._swap_layout()
+
         self.tie_tau = float(tie_tau)
         self.drafted = 0            # draft tokens offered to verify
         self.accepted = 0           # draft tokens accepted
         self.spec_steps = 0
         self.rescue_steps = 0       # steps that needed a decode-graph rescue
+        self.nan_rows = 0           # verify rows voided by the NaN guard
         dcfg = self.draft_cfg
         self._draft_prefill_fn = jax.jit(
             lambda p, c, t, po, m, bt: M.lm_prefill(
@@ -155,6 +159,42 @@ class SpecPagedEngine(PagedEngine):
 
     def step_growth_bound(self, req=None) -> int:
         return self._growth_bound(req)
+
+    # -- host swap (suspend/resume) covers BOTH models' pools ----------------
+
+    def _swap_layout(self):
+        per_page, fixed = super()._swap_layout()
+        draft = getattr(self, "draft_cache", None)
+        if draft is not None:           # absent during super().__init__
+            for c in draft["blocks"]:   # attention-only: every leaf paged
+                per_page += sum(a.nbytes // a.shape[1]
+                                for a in jax.tree.leaves(c))
+            for c in draft["tail"]:
+                per_page += sum(a.nbytes // a.shape[0]
+                                for a in jax.tree.leaves(c))
+        return per_page, fixed
+
+    def _gather_pages(self, idx):
+        saved = super()._gather_pages(idx)
+        i = jnp.asarray(idx, jnp.int32)
+        saved["draft_blocks"] = [
+            jax.tree.map(lambda a: np.asarray(a[:, i]), c)
+            for c in self.draft_cache["blocks"]]
+        saved["draft_tail"] = [jax.tree.map(lambda a: np.asarray(a[i]), c)
+                               for c in self.draft_cache["tail"]]
+        return saved
+
+    def _scatter_pages(self, idx, saved) -> None:
+        super()._scatter_pages(idx, saved)
+        i = jnp.asarray(idx, jnp.int32)
+        self.draft_cache = {
+            "blocks": [jax.tree.map(lambda a, v: a.at[:, i].set(v), c, sv)
+                       for c, sv in zip(self.draft_cache["blocks"],
+                                        saved["draft_blocks"])],
+            "tail": [jax.tree.map(lambda a, v: a.at[i].set(v), c, sv)
+                     for c, sv in zip(self.draft_cache["tail"],
+                                      saved["draft_tail"])],
+        }
 
     # -- draft-side prefill --------------------------------------------------
 
@@ -256,11 +296,21 @@ class SpecPagedEngine(PagedEngine):
         logits, self.cache = self._verify_fn(
             self.params, self.cache, vtok, pos0, keff_dev + 1, bt_dev)
         lg = np.asarray(logits, np.float32)              # (slots, kpad+1, V)
+        if self.fault_hook is not None:
+            lg = self.fault_hook.corrupt_logits(lg, site="verify")
         greedy = lg.argmax(-1)
         top2 = np.partition(lg, -2, axis=-1)[..., -2:]
         # tie guard threshold: margin relative to the row's logit spread
         # (inter-graph divergence scales with activation magnitude)
         clear = (top2[..., 1] - top2[..., 0]) >= self.tie_tau * lg.std(-1)
+        # NaN guard: a poisoned (non-finite) verify row compares False into
+        # ``clear`` already, but make it explicit — the row is voided, so
+        # emission stops before it and the decode-graph rescue below takes
+        # over when nothing else would emit.  That is the whole fault story:
+        # no token derived from a poisoned row can ever be emitted.
+        finite = np.isfinite(lg).all(-1)
+        self.nan_rows += int((~finite[np.asarray(slots)]).sum())
+        clear &= finite
         drafts = np.asarray(drafts)
         self.decode_steps += 1
         self.spec_steps += 1
@@ -311,7 +361,7 @@ class SpecPagedEngine(PagedEngine):
             self.rescue_steps += 1
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slots, 0] = self.last[slots]
-            toks, self.cache = self._decode_fn(1)(
+            toks, _, self.cache = self._decode_fn(1)(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.written, jnp.int32),
                 self._device_table(self.active))

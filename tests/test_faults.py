@@ -1,0 +1,129 @@
+"""Deterministic fault injection: the executable robustness claims.
+
+The acceptance gate from the robustness PR: under a seeded FaultPlan
+(forced PoolExhausted at admit and page growth, transient decode faults,
+NaN-poisoned logit rows), every request that completes must produce a
+greedy stream BITWISE identical to the fault-free run, and the pool must
+drain clean (free + live == capacity).  Faults either raise before any
+state change (admit/decode sites) or are rescued by re-running the same
+jitted graph (NaN site) — so the only observable difference is scheduling.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import (FaultPlan, FaultyEngine, PagedEngine, Request,
+                         Scheduler, State)
+from tests.test_scheduler import FakeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = M.lm_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **over):
+    kw = dict(slots=3, num_pages=10, page_size=8, max_len=32, chunk=8,
+              decode_block=4)
+    kw.update(over)
+    return PagedEngine(cfg, params, **kw)
+
+
+def _run(engine, prompts, gen, **sched_kw):
+    sched = Scheduler(engine, **sched_kw)
+    for p in prompts:
+        sched.submit(p, gen)
+    done = sched.run_until_done()
+    return sched, {r.rid: r.output for r in done
+                   if r.state is State.FINISHED}
+
+
+def test_faulty_trace_is_bitwise_identical_to_fault_free(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, 6)))
+               for _ in range(4)]
+    _, ref = _run(_engine(cfg, params), prompts, 10)
+    assert len(ref) == 4
+
+    plan = FaultPlan(7, p_admit=0.7, p_growth=0.2, p_transient=0.15,
+                     p_nan=0.03)
+    eng = _engine(cfg, params)
+    sched, out = _run(FaultyEngine(eng, plan), prompts, 10)
+    # the trace must actually exercise every fault site
+    assert plan.admit_faults > 0, plan.stats()
+    assert plan.growth_faults > 0, plan.stats()
+    assert plan.transient_faults > 0, plan.stats()
+    assert plan.nan_rows > 0, plan.stats()
+    assert eng.nan_rescues > 0 and sched.decode_faults > 0
+    assert out == ref, "injected faults changed a completed output"
+    assert eng.pool.num_free + eng.pool.num_live == eng.pool.capacity
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+def test_nan_poison_alone_is_rescued_bitwise(tiny_model):
+    """Only the NaN site armed: the guard re-runs the SAME jitted decode
+    block (idempotent cache rewrite), so the emitted tokens are those of
+    the clean run — the spec.py rescue idiom at the base-engine level."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(1)
+    prompt = list(map(int, rng.integers(1, cfg.vocab, 8)))
+
+    ref_eng = _engine(cfg, params, num_pages=16)
+    req = Request(rid=0, prompt=prompt, gen=12)
+    ref = [ref_eng.admit(0, req)]
+    while len(ref) < 12:
+        ref.extend(ref_eng.decode([0])[0])
+
+    # hot enough to fire across a 12-token run, cool enough that a rescue
+    # re-run is unlikely to be re-poisoned 5 times in a row
+    plan = FaultPlan(3, p_nan=0.15)
+    eng = _engine(cfg, params, num_pages=16)
+    FaultyEngine(eng, plan)                # arms engine.fault_hook
+    req = Request(rid=0, prompt=prompt, gen=12)
+    out = [eng.admit(0, req)]
+    while len(out) < 12:
+        out.extend(eng.decode([0])[0])
+    assert plan.nan_rows > 0 and eng.nan_rescues > 0
+    assert out[:12] == ref[:12]
+
+
+def test_persistent_nan_becomes_decode_fault_then_loud_failure(tiny_model):
+    """A NaN that never clears exhausts the in-engine rescue budget
+    (DecodeFault), and a DecodeFault that never clears exhausts the
+    scheduler's retry budget — a loud RuntimeError, not a hang."""
+    cfg, params = tiny_model
+    plan = FaultPlan(0, p_nan=1.0, max_faults=None)
+    eng = _engine(cfg, params, num_pages=16)
+    sched = Scheduler(FaultyEngine(eng, plan), max_decode_faults=2)
+    sched.submit([3, 1, 4, 1, 5], 8)
+    with pytest.raises(RuntimeError, match="not transient"):
+        sched.run_until_done()
+    assert sched.decode_faults == 3        # initial + 2 retries
+
+
+def test_injected_admit_faults_never_leak_pages():
+    """Fake-engine sweep: heavy admit-site injection across seeds — every
+    request reaches a terminal state, completed ones carry the exact solo
+    stream, and the pool drains clean regardless of the fault trace."""
+    for seed in range(5):
+        plan = FaultPlan(seed, p_admit=0.4, p_growth=0.2, p_transient=0.2)
+        eng = FakeEngine(slots=2, num_pages=10, page_size=4)
+        sched = Scheduler(FaultyEngine(eng, plan))
+        rng = np.random.default_rng(seed)
+        for _ in range(6):
+            gen = int(rng.integers(2, 10))
+            sched.submit([int(t) for t in rng.integers(1, 100, 4)], gen)
+        done = sched.run_until_done()
+        assert len(done) == 6 and all(r.done for r in done)
+        for r in done:
+            if r.state is State.FINISHED:
+                assert r.output == FakeEngine.expected(r)
+        assert eng.pool.num_free + eng.pool.num_live == eng.pool.capacity
+        assert eng.pool.num_live == 0
+        eng.pool.check()

@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.serve import (NULL_PAGE, BlockTables, PagePool, PoolExhausted,
-                         pages_needed)
+                         SwapStore, pages_needed)
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +123,41 @@ def test_device_image_null_padding_and_active_nulling():
         bt.device(active=[False, False, True])[0], NULL_PAGE)
     np.testing.assert_array_equal(
         bt.device(active=[False, False, True])[2], [2, 0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# SwapStore: the host budget behind swap-vs-recompute
+# ---------------------------------------------------------------------------
+
+def test_swap_store_accounting_lifecycle():
+    sw = SwapStore(budget_bytes=100)
+    assert sw.fits(60)
+    sw.put(1, "suspA", 60)
+    assert 1 in sw and len(sw) == 1 and sw.used_bytes == 60
+    assert not sw.fits(50)              # over budget -> recompute
+    assert sw.refused == 1
+    assert sw.fits(40)
+    sw.put(2, "suspB", 40)
+    # peek does NOT remove: resume may fail and retry later
+    assert sw.peek(1) == "suspA" and sw.peek(1) == "suspA"
+    assert sw.pop(1) == "suspA"
+    assert sw.used_bytes == 40 and 1 not in sw
+    sw.drop(2)                          # request cancelled while suspended
+    assert sw.used_bytes == 0 and len(sw) == 0
+    assert (sw.swapped_out, sw.swapped_in, sw.dropped) == (2, 1, 1)
+    sw.check()
+
+
+def test_swap_store_edges():
+    sw = SwapStore()                    # unbounded: always fits
+    assert sw.fits(10**12) and sw.refused == 0
+    sw.put(7, object(), 5)
+    with pytest.raises(ValueError, match="already swapped"):
+        sw.put(7, object(), 5)
+    with pytest.raises(KeyError):
+        sw.pop(8)
+    with pytest.raises(ValueError):
+        SwapStore(budget_bytes=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -283,6 +318,38 @@ if HAVE_HYPOTHESIS:
             if active[s]:
                 pool.release(bt.drop(s))
         assert pool.num_free == pool.capacity
+        pool.check()
+
+    @given(st.integers(3, 12), st.lists(st.integers(1, 3), max_size=3),
+           st.integers(1, 200), st.booleans())
+    @FAST
+    def test_prop_pool_exhausted_has_no_partial_effects(
+            num_pages, pre, n_tok, grow):
+        """The contract every eviction/retry path leans on: when an admit
+        or growth allocation raises PoolExhausted — from the pool (too few
+        free pages) or from the table (per-slot overflow, pages released
+        by the caller as the engine does) — the free list, refcounts, and
+        EVERY block table are exactly as before the attempt."""
+        ps, cap_tab = 4, 4
+        pool = PagePool(num_pages, ps)
+        bt = BlockTables(2, cap_tab)
+        for n in pre:                    # occupy slot 0 with fitting allocs
+            if n <= pool.num_free and bt.num_pages(0) + n <= cap_tab:
+                bt.append(0, pool.alloc(n))
+        free0, rc0 = list(pool._free), pool.refcount.copy()
+        tables0 = [list(t) for t in bt.tables]
+        slot = 0 if grow else 1          # growth extends 0, admit fills 1
+        try:
+            pages = pool.alloc(pages_needed(n_tok, ps))
+            try:
+                bt.append(slot, pages)
+            except PoolExhausted:
+                pool.release(pages)      # the engine's cleanup on overflow
+                raise
+        except PoolExhausted:
+            assert pool._free == free0
+            np.testing.assert_array_equal(pool.refcount, rc0)
+            assert [list(t) for t in bt.tables] == tables0
         pool.check()
 
     @given(st.integers(2, 5), st.integers(1, 4), st.integers(1, 4))

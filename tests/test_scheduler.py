@@ -24,8 +24,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.serve import (BlockTables, PagePool, PoolExhausted, Request,
-                         Scheduler, pages_needed)
+from repro.serve import (BlockTables, DecodeFault, PagePool, PoolExhausted,
+                         Request, Scheduler, State, pages_needed)
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +209,232 @@ def test_gen_one_request_finishes_at_admission():
     done = sched.run_until_done()
     assert done[0].output == [FakeEngine.tok(done[0], 0)]
     assert eng.pool.num_live == 0
+
+
+# ---------------------------------------------------------------------------
+# layer 1b: robustness — swap eviction, deadlines, backpressure, faults
+# ---------------------------------------------------------------------------
+
+class FakeSusp:
+    """What SwapFakeEngine hands the SwapStore: enough to resume (request,
+    progress cursors) plus a byte size for the budget accounting."""
+
+    def __init__(self, req, written, emitted, nbytes):
+        self.req, self.written, self.emitted = req, written, emitted
+        self.nbytes = nbytes
+
+
+class SwapFakeEngine(FakeEngine):
+    """FakeEngine + the optional suspend/resume surface: suspension frees
+    the pool pages (they went "to host") and resume re-allocates exactly
+    the pages the written prefix needs — the same pool contract as the real
+    PagedEngine, minus the device arrays."""
+
+    susp_bytes = 64
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.suspends = self.resumes = 0
+
+    def suspend_bytes(self, slot):
+        return self.susp_bytes
+
+    def suspend(self, slot):
+        req, written, emitted = self.state[slot]
+        self.pool.release(self.bt.drop(slot))
+        del self.state[slot]
+        self.suspends += 1
+        return FakeSusp(req, written, emitted, self.susp_bytes)
+
+    def resume(self, slot, susp):
+        pages = self.pool.alloc(pages_needed(susp.written, self.page_size))
+        self.bt.append(slot, pages)
+        self.state[slot] = [susp.req, susp.written, susp.emitted]
+        self.resumes += 1
+
+
+def test_swap_eviction_keeps_output_and_never_readmits():
+    """The resumable-preemption contract at the scheduler level: under pool
+    pressure with swapping on, evicted requests keep their partial output,
+    are admitted exactly once (no re-prefill), and still finish with the
+    exact solo stream."""
+    eng = SwapFakeEngine(slots=3, num_pages=10, page_size=4, decode_block=4)
+    sched = Scheduler(eng)
+    rng = np.random.default_rng(2)
+    for p, g in _trace(rng, 10, max_len=32, min_gen=8, max_gen=20):
+        sched.submit(p, g)
+    done = sched.run_until_done()
+    swapped = [r for r in done if r.swaps > 0]
+    assert swapped, "scenario failed to force a swap eviction"
+    assert eng.suspends == eng.resumes == sum(r.swaps for r in done)
+    for req in done:
+        assert req.state is State.FINISHED
+        assert req.output == FakeEngine.expected(req), req.rid
+        assert req.preemptions >= req.swaps
+        # one admission per request: resume never re-runs the prefill path
+        assert eng.admit_log.count(req.rid) == 1
+    assert eng.pool.num_live == 0
+    assert sched.swap.used_bytes == 0 and len(sched.swap) == 0
+    sched.swap.check()
+    eng.pool.check()
+
+
+def test_zero_swap_budget_forces_recompute():
+    """host_swap_bytes=0 disables swapping: every eviction takes the
+    recompute path (refused by the store, output reset, re-admitted)."""
+    eng = SwapFakeEngine(slots=2, num_pages=8, page_size=4, decode_block=8)
+    sched = Scheduler(eng, host_swap_bytes=0)
+    sched.submit([1] * 4, 16)
+    sched.submit([2] * 4, 16)
+    done = sched.run_until_done()
+    assert sum(r.preemptions for r in done) > 0
+    assert eng.suspends == 0 and sched.swap.refused > 0
+    assert all(r.swaps == 0 for r in done)
+    for req in done:
+        assert req.output == FakeEngine.expected(req)
+
+
+def test_oldest_is_never_the_victim_with_swap_enabled():
+    """The no-starvation induction must survive the swap policy: victims
+    are still the youngest running request."""
+    eng = SwapFakeEngine(slots=3, num_pages=10, page_size=4, decode_block=4)
+    victims = []
+    orig = Scheduler._preempt_youngest
+
+    def spy(self):
+        running = sorted(r.key for r in self.running.values())
+        orig(self)
+        victims.append((max(running)[1], [k[1] for k in running]))
+
+    Scheduler._preempt_youngest = spy
+    try:
+        sched = Scheduler(eng)
+        rng = np.random.default_rng(4)
+        for p, g in _trace(rng, 10, max_len=32, min_gen=8, max_gen=20):
+            sched.submit(p, g)
+        done = sched.run_until_done()
+    finally:
+        Scheduler._preempt_youngest = orig
+    assert victims and eng.suspends > 0
+    for victim, running_rids in victims:
+        assert victim == max(running_rids)
+    for req in done:
+        assert req.output == FakeEngine.expected(req)
+
+
+def test_max_preemptions_overflow_fails_request_not_server():
+    """The satellite pin: eviction-count overflow is a terminal per-request
+    FAILED status with pages freed — run_until_done does NOT raise."""
+    eng = FakeEngine(slots=2, num_pages=8, page_size=4, decode_block=8)
+    sched = Scheduler(eng, max_preemptions=0)
+    sched.submit([1] * 4, 16)
+    sched.submit([2] * 4, 16)
+    done = sched.run_until_done()          # no RuntimeError
+    failed = [r for r in done if r.state is State.FAILED]
+    assert len(failed) == 1 and "livelock" in failed[0].error
+    assert failed[0].rid == 1              # the younger request
+    ok = [r for r in done if r.state is State.FINISHED]
+    assert len(ok) == 1
+    assert ok[0].output == FakeEngine.expected(ok[0])
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+def test_deadline_cancels_queued_and_running():
+    """Requests past their deadline end CANCELLED wherever they are, with
+    pages freed and partial output kept on the running one."""
+    eng = FakeEngine(slots=1, num_pages=32, page_size=4, decode_block=2)
+    sched = Scheduler(eng)
+    a = sched.submit([1] * 4, 40, deadline=3)     # cancels while RUNNING
+    b = sched.submit([2] * 4, 8, deadline=2)      # cancels while QUEUED
+    c = sched.submit([3] * 4, 4)                  # no deadline: finishes
+    done = sched.run_until_done()
+    assert a.state is State.CANCELLED and "running" in a.error
+    assert 0 < len(a.output) < a.gen              # partial output kept
+    assert a.output == FakeEngine.expected(a)[: len(a.output)]
+    assert b.state is State.CANCELLED and "queued" in b.error
+    assert c.state is State.FINISHED
+    assert c.output == FakeEngine.expected(c)
+    assert len(done) == 3 and eng.pool.num_live == 0
+    eng.pool.check()
+
+
+def test_max_queue_wait_rejects_with_retry_after():
+    eng = FakeEngine(slots=1, num_pages=32, page_size=4, decode_block=2)
+    sched = Scheduler(eng)
+    a = sched.submit([1] * 4, 30)
+    b = sched.submit([2] * 4, 8, max_queue_wait=2)
+    done = sched.run_until_done()
+    assert a.state is State.FINISHED
+    assert b.state is State.REJECTED
+    assert b.retry_after is not None and b.retry_after >= 1
+    assert b.output == [] and len(done) == 2
+    eng.pool.check()
+
+
+def test_backpressure_sheds_submits_past_the_queue_bound():
+    eng = FakeEngine(slots=1, num_pages=32, page_size=4)
+    sched = Scheduler(eng, max_waiting=1)
+    a = sched.submit([1] * 4, 8)
+    b = sched.submit([2] * 4, 8)           # queue holds 1 -> shed
+    assert a.state is State.WAITING
+    assert b.state is State.REJECTED and b.retry_after >= 1
+    assert b in sched.finished             # terminal immediately, no step
+    done = sched.run_until_done()
+    assert a.state is State.FINISHED and len(done) == 2
+
+
+def test_drain_cancels_everything_and_frees_pages():
+    """Graceful shutdown: every in-flight and queued request terminates
+    CANCELLED with partial output kept; the pool is clean."""
+    eng = SwapFakeEngine(slots=2, num_pages=32, page_size=4, decode_block=2)
+    sched = Scheduler(eng)
+    for i in range(5):
+        sched.submit([i + 1] * 4, 20)
+    for _ in range(3):
+        sched.step()
+    done = sched.drain()
+    assert len(done) == 5
+    assert not sched.waiting and not sched.running and len(sched.swap) == 0
+    for req in done:
+        assert req.done
+        assert req.output == FakeEngine.expected(req)[: len(req.output)]
+    assert any(r.output for r in done)     # the running ones kept progress
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+class FlakyEngine(FakeEngine):
+    """Raises DecodeFault on the first ``flakes`` decode calls, then works."""
+
+    def __init__(self, flakes, **kw):
+        super().__init__(**kw)
+        self.flakes = flakes
+        self.decode_calls = 0
+
+    def decode(self, slots):
+        self.decode_calls += 1
+        if self.decode_calls <= self.flakes:
+            raise DecodeFault(f"flake {self.decode_calls}")
+        return super().decode(slots)
+
+
+def test_transient_decode_faults_are_retried():
+    eng = FlakyEngine(3, slots=2, num_pages=32, page_size=4)
+    sched = Scheduler(eng)
+    sched.submit([1] * 4, 8)
+    done = sched.run_until_done()
+    assert sched.decode_faults == 3
+    assert done[0].state is State.FINISHED
+    assert done[0].output == FakeEngine.expected(done[0])
+
+
+def test_nontransient_decode_fault_gives_up_loudly():
+    eng = FlakyEngine(10_000, slots=1, num_pages=32, page_size=4)
+    sched = Scheduler(eng, max_decode_faults=5)
+    sched.submit([1] * 4, 8)
+    with pytest.raises(RuntimeError, match="not transient"):
+        sched.run_until_done()
 
 
 # ---------------------------------------------------------------------------

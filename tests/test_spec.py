@@ -117,6 +117,72 @@ def test_parity_under_preemption(tiny_model):
 
 
 # ---------------------------------------------------------------------------
+# robustness: suspend/resume + fault injection on the spec engine
+# ---------------------------------------------------------------------------
+
+def test_spec_suspend_resume_bitwise_releases_target_and_draft(tiny_model):
+    """Host-swap of a speculating slot: suspend must free EVERY page the
+    slot held — target and draft caches share the one block table, so the
+    pool draining to zero proves both — and resume (into a different slot)
+    must continue the accepted stream bitwise with no re-prefill of
+    either model."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(11)
+    prompt = list(map(int, rng.integers(1, cfg.vocab, 9)))
+    gen = 14
+    mk = lambda: SpecPagedEngine(cfg, params, spec_k=4,
+                                 rng=jax.random.PRNGKey(7), **KW)
+
+    ref_eng = mk()
+    req = Request(rid=0, prompt=prompt, gen=gen)
+    ref = [ref_eng.admit(0, req)]
+    while len(ref) < gen:
+        ref.extend(ref_eng.decode([0])[0])
+    ref = ref[:gen]
+
+    eng = mk()
+    req = Request(rid=0, prompt=prompt, gen=gen)
+    out = [eng.admit(0, req)]
+    prefills = eng.prefill_steps
+    out.extend(eng.decode([0])[0])
+    susp = eng.suspend(0)
+    assert eng.pool.num_live == 0, "suspend leaked target or draft pages"
+    eng.pool.check()
+    eng.resume(1, susp)
+    while len(out) < gen:
+        out.extend(eng.decode([1])[1])
+    assert out[:gen] == ref, "suspend/resume changed the spec stream"
+    assert eng.prefill_steps == prefills == ref_eng.prefill_steps
+    eng.finish(1)
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+def test_spec_nan_poisoned_verify_rows_fall_back_bitwise(tiny_model):
+    """NaN rows injected into the host-side verify logits must fail the
+    clear-guard (finite check) and take the same decode-graph rescue as a
+    tie — outputs stay bitwise equal to the clean spec run."""
+    from repro.serve import FaultPlan, FaultyEngine
+    cfg, params = tiny_model
+    prompts, gens = _trace(cfg)
+    mk = lambda: SpecPagedEngine(cfg, params, spec_k=4,
+                                 rng=jax.random.PRNGKey(7), **KW)
+    _, ref, _ = _run(mk, prompts, gens)
+
+    plan = FaultPlan(5, p_nan=0.05)
+    eng = mk()
+    sched = Scheduler(FaultyEngine(eng, plan))
+    for p, g in zip(prompts, gens):
+        sched.submit(p, g)
+    done = sched.run_until_done()
+    assert plan.nan_rows > 0 and eng.nan_rows > 0, \
+        "trace failed to poison a verify row"
+    assert [r.output for r in done] == ref
+    assert eng.pool.num_live == 0
+    eng.pool.check()
+
+
+# ---------------------------------------------------------------------------
 # construction + accounting
 # ---------------------------------------------------------------------------
 
