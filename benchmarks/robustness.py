@@ -47,11 +47,11 @@ def _model():
     return cfg, M.lm_init(jax.random.PRNGKey(0), cfg)
 
 
-def _engine(cfg, params, num_pages):
+def _engine(cfg, params, num_pages, metrics=None):
     from repro.serve import PagedEngine
     return PagedEngine(cfg, params, slots=SLOTS, num_pages=num_pages,
                        page_size=PAGE, max_len=MAX_LEN, chunk=CHUNK,
-                       decode_block=4)
+                       decode_block=4, metrics=metrics)
 
 
 def _trace(cfg, n, plen, rng):
@@ -62,33 +62,47 @@ def _trace(cfg, n, plen, rng):
 def preempt_rows(cfg, params) -> None:
     """Undersized pool (forces eviction every few quanta), long gens (lots
     of work at stake per eviction): swap vs recompute on the same trace."""
+    from repro.obs import Registry
     from repro.serve import Scheduler
     prompts = _trace(cfg, 3, 6, np.random.default_rng(0))
     gen = 22
     stats = {}
     for policy, budget in (("swap", None), ("recompute", 0)):
-        eng = _engine(cfg, params, num_pages=8)
-        sched = Scheduler(eng, host_swap_bytes=budget)
+        reg = Registry()
+        eng = _engine(cfg, params, num_pages=8, metrics=reg)
+        sched = Scheduler(eng, host_swap_bytes=budget, metrics=reg)
         for p in prompts:
             sched.submit(p, gen)
         t0 = time.perf_counter()
         done = sched.run_until_done()
         dt = time.perf_counter() - t0
         useful = sum(len(r.output) for r in done)
+        # swap/preemption numbers come from the obs registry; the legacy
+        # engine attributes are views over the same counters, asserted
+        # bitwise so the two reporting paths can never drift
+        recovered = int(reg.value("engine_swapped_tokens_total"))
+        preempts = int(reg.value("sched_preemptions_total"))
+        prefill_tok = int(reg.value("engine_prefill_tokens_total"))
+        decode_tok = int(reg.value("engine_decode_tokens_total"))
+        assert recovered == eng.swapped_out_tokens
+        assert preempts == sum(r.preemptions for r in done)
+        assert prefill_tok == eng.prefill_tokens
+        assert decode_tok == eng.decoded_tokens
         # work this policy re-paid because of evictions: prompt rows
         # prefilled again + tokens emitted more than once.  Every admission
         # emits one token from the prefill logits (a recompute eviction
         # re-admits; a swap resume does not), the rest come from decode.
         admits = len(done) + sum(r.preemptions - r.swaps for r in done)
-        redone = (eng.prefill_tokens - sum(len(p) for p in prompts)) \
-            + (eng.decoded_tokens + admits - useful)
+        redone = (prefill_tok - sum(len(p) for p in prompts)) \
+            + (decode_tok + admits - useful)
         stats[policy] = dict(
             completed=len([r for r in done if not r.error]),
-            preemptions=sum(r.preemptions for r in done),
-            recovered_tokens=eng.swapped_out_tokens,
+            preemptions=preempts,
+            recovered_tokens=recovered,
             redone_tokens=redone,
-            recovery_x=round(eng.swapped_out_tokens / max(1, redone), 2),
-            prefill_steps=eng.prefill_steps, decode_steps=eng.decode_steps,
+            recovery_x=round(recovered / max(1, redone), 2),
+            prefill_steps=int(reg.value("engine_prefill_steps_total")),
+            decode_steps=int(reg.value("engine_decode_steps_total")),
             outputs=[r.output for r in sorted(done, key=lambda r: r.rid)],
             wall_s=dt)
         assert eng.pool.num_live == 0
@@ -114,24 +128,32 @@ def deadline_rows(cfg, params) -> None:
     """2x oversubscription: without bounds everything eventually finishes
     (high latency); with deadlines + queue-wait bounds the scheduler sheds
     the tail and spends its quanta on requests that can still make it."""
+    from repro.obs import Registry
     from repro.serve import Scheduler, State
     prompts = _trace(cfg, 6, 6, np.random.default_rng(1))
     gen = 14
     for label, kw in (("unbounded", {}),
                       ("bounded", dict(deadline=8, max_queue_wait=3))):
-        eng = _engine(cfg, params, num_pages=10)
-        sched = Scheduler(eng)
+        reg = Registry()
+        eng = _engine(cfg, params, num_pages=10, metrics=reg)
+        sched = Scheduler(eng, metrics=reg)
         for p in prompts:
             sched.submit(p, gen, **kw)
         done = sched.run_until_done()
         out_tokens = sum(len(r.output) for r in done
                          if r.state is State.FINISHED)
+        # terminal-state mix from the registry, pinned against the request
+        # list so the counters and the objects cannot disagree
+        by = {s: int(reg.value("sched_requests_total", state=s.value))
+              for s in (State.FINISHED, State.CANCELLED, State.REJECTED)}
+        for s, n in by.items():
+            assert n == sum(r.state is s for r in done)
+        quanta = int(reg.value("sched_quanta_total"))
+        assert quanta == sched.time
         emit(f"robustness,deadline,{label}", -1.0, -1.0,
-             finished=sum(r.state is State.FINISHED for r in done),
-             cancelled=sum(r.state is State.CANCELLED for r in done),
-             rejected=sum(r.state is State.REJECTED for r in done),
-             quanta=sched.time,
-             goodput=round(out_tokens / max(1, sched.time), 2))
+             finished=by[State.FINISHED], cancelled=by[State.CANCELLED],
+             rejected=by[State.REJECTED], quanta=quanta,
+             goodput=round(out_tokens / max(1, quanta), 2))
         assert eng.pool.num_live == 0
         eng.pool.check()
 
@@ -159,13 +181,14 @@ def swap_overhead_row(cfg, params) -> None:
 
 
 def fault_row(cfg, params) -> None:
+    from repro.obs import Registry
     from repro.serve import FaultPlan, FaultyEngine, Scheduler
     prompts = _trace(cfg, 4, 6, np.random.default_rng(3))
     gen = 10
 
-    def run(wrap):
-        eng = _engine(cfg, params, num_pages=10)
-        sched = Scheduler(wrap(eng))
+    def run(wrap, reg=None):
+        eng = _engine(cfg, params, num_pages=10, metrics=reg)
+        sched = Scheduler(wrap(eng), metrics=reg)
         for p in prompts:
             sched.submit(p, gen)
         done = sched.run_until_done()
@@ -174,12 +197,27 @@ def fault_row(cfg, params) -> None:
         return eng, [r.output for r in sorted(done, key=lambda r: r.rid)]
 
     _, ref = run(lambda e: e)
+    reg = Registry()
     plan = FaultPlan(7, p_admit=0.7, p_growth=0.2, p_transient=0.15,
-                     p_nan=0.03)
-    eng, out = run(lambda e: FaultyEngine(e, plan))
+                     p_nan=0.03, metrics=reg)
+    eng, out = run(lambda e: FaultyEngine(e, plan), reg=reg)
+    # fault numbers come from the shared obs registry; plan.stats() reads
+    # the same counters, asserted bitwise so the views cannot drift
+    faults = {k: int(reg.value(f"fault_{k}_total"))
+              for k in ("admit", "growth", "transient")}
+    faults["nan_rows"] = int(reg.value("fault_nan_rows_total"))
+    st = plan.stats()
+    assert faults["admit"] == st["admit_faults"]
+    assert faults["growth"] == st["growth_faults"]
+    assert faults["transient"] == st["transient_faults"]
+    assert faults["nan_rows"] == st["nan_rows"]
+    rescues = int(reg.value("engine_nan_rescues_total"))
+    assert rescues == eng.nan_rescues
     emit("robustness,faults", -1.0, -1.0,
          bitwise_equal=int(out == ref), pages_leaked=eng.pool.num_live,
-         nan_rescues=eng.nan_rescues, **plan.stats())
+         nan_rescues=rescues, seed=st["seed"],
+         admit_faults=faults["admit"], growth_faults=faults["growth"],
+         transient_faults=faults["transient"], nan_rows=faults["nan_rows"])
 
 
 def main() -> None:

@@ -48,12 +48,22 @@ backpressure contract, and ``--fault-seed --fault-admit/-decode/-transient/
 -nan`` run the whole trace under deterministic fault injection
 (repro.serve.faults) — completed outputs stay bitwise identical and a page
 leak assertion runs at shutdown.  Ctrl-C drains gracefully on both paths.
+
+Observability (paged only): ``--trace-out`` records the run and writes a
+Chrome trace-event JSON (request lifecycles on per-request tracks, engine /
+scheduler spans on their own tracks; load in Perfetto or chrome://tracing),
+``--metrics-out`` dumps the metrics registry at exit (JSON snapshot, or
+Prometheus text for ``.prom`` paths), and ``--metrics-every N`` prints a
+compact registry line every N scheduler quanta.  Reported tok/s is over
+device time (jitted calls + sync); scheduler/host time prints separately.
+See repro.obs.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import functools
+import json
 import time
 
 import jax
@@ -134,10 +144,14 @@ class BatchedServer:
         self.completed: list[list[int]] = []   # archived finished sequences
         self.budget = np.zeros((slots,), np.int32)
         self.key = jax.random.PRNGKey(seed)
-        # perf accounting (prefill and decode reported separately)
+        # perf accounting (prefill and decode reported separately); the
+        # *_device_s timers cover only the jitted model calls + the sync, so
+        # tok/s reflects device-step time and host bookkeeping is reported
+        # as overhead, not smeared into throughput
         self.prefill_steps = self.decode_steps = 0
         self.prefill_tokens = self.decoded_tokens = 0
         self.prefill_s = self.decode_s = 0.0
+        self.prefill_device_s = self.decode_device_s = 0.0
         self._prefill = jax.jit(
             lambda p, c, t, po, m: M.lm_prefill(p, {"tokens": t}, cfg,
                                                 cache=c, pos0=po, mask=m))
@@ -189,6 +203,7 @@ class BatchedServer:
         self.cache = _slot_reset(self.cache, jnp.asarray(s, jnp.int32))
         mask = jnp.zeros((self.slots,), bool).at[s].set(True)
         logits = None
+        td = time.perf_counter()
         for i in range(0, len(prompt), self.chunk):
             piece = prompt[i:i + self.chunk]
             tokens = np.zeros((self.slots, len(piece)), np.int32)
@@ -198,6 +213,7 @@ class BatchedServer:
                 self.params, self.cache, jnp.asarray(tokens), pos0, mask)
             self.prefill_steps += 1
         jax.block_until_ready(logits)
+        self.prefill_device_s += time.perf_counter() - td
         self.prefill_s += time.perf_counter() - t0
         self.prefill_tokens += len(prompt)
 
@@ -219,6 +235,7 @@ class BatchedServer:
     def step(self) -> None:
         if not self.active.any():
             return
+        t0 = time.perf_counter()
         act = np.flatnonzero(self.active)
         remaining = int(min(self.budget[s] - len(self.outputs[s])
                             for s in act))
@@ -228,12 +245,12 @@ class BatchedServer:
         for s in act:
             tokens[s, 0] = self.outputs[s][-1]
         self.key, sub = jax.random.split(self.key)
-        t0 = time.perf_counter()
+        td = time.perf_counter()
         toks, self.cache = self._decode_fn(n)(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(self.pos), sub)
-        toks = np.asarray(toks)
-        self.decode_s += time.perf_counter() - t0
+        toks = np.asarray(toks)              # device sync
+        self.decode_device_s += time.perf_counter() - td
         self.decode_steps += n
         for s in act:
             take = min(n, int(self.budget[s]) - len(self.outputs[s]))
@@ -241,6 +258,7 @@ class BatchedServer:
             self.decoded_tokens += take
             self.pos[s] += n
             self._maybe_finish(s)
+        self.decode_s += time.perf_counter() - t0
 
     def _maybe_finish(self, s: int) -> None:
         if len(self.outputs[s]) >= self.budget[s] \
@@ -256,9 +274,12 @@ class BatchedServer:
 def _serve_paged(args, cfg, params, rng) -> None:
     """Streaming front-end over the paged engine: submit the request trace
     to the Scheduler and let it admit / preempt / retire against the pool."""
+    from repro.obs import Registry, TraceRecorder
     from repro.serve import (FaultPlan, FaultyEngine, PagedEngine, Scheduler,
                              SpecPagedEngine, State, draft_of)
 
+    reg = Registry()
+    trace = TraceRecorder(enabled=bool(args.trace_out))
     num_pages = args.num_pages if args.num_pages is not None else \
         args.slots * -(-args.max_len // args.page_size) + 1
     kw = dict(slots=args.slots, num_pages=num_pages,
@@ -266,7 +287,7 @@ def _serve_paged(args, cfg, params, rng) -> None:
               chunk=args.chunk, tune=args.tune,
               decode_backend=args.decode_backend,
               moe_backend=args.moe_backend, quant=args.quant,
-              kv_quant=args.kv_quant)
+              kv_quant=args.kv_quant, metrics=reg, trace=trace)
     if args.spec_k:
         if args.draft_config == "self":
             draft_cfg, draft_params = cfg, params
@@ -292,19 +313,29 @@ def _serve_paged(args, cfg, params, rng) -> None:
         plan = FaultPlan(args.fault_seed, p_admit=args.fault_admit,
                          p_growth=args.fault_decode,
                          p_transient=args.fault_transient,
-                         p_nan=args.fault_nan)
+                         p_nan=args.fault_nan, metrics=reg, trace=trace)
         front = FaultyEngine(engine, plan)
     swap_bytes = None if args.host_swap_mib is None \
         else int(args.host_swap_mib * 2**20)
     sched = Scheduler(front, host_swap_bytes=swap_bytes,
-                      max_waiting=args.max_waiting)
+                      max_waiting=args.max_waiting, metrics=reg, trace=trace)
     for _ in range(args.requests):
         sched.submit(list(rng.integers(1, cfg.vocab, args.prompt_len)),
                      args.gen_tokens, deadline=args.deadline,
                      max_queue_wait=args.max_queue_wait)
     t0 = time.perf_counter()
     try:
-        done = sched.run_until_done()
+        if args.metrics_every:
+            # same convergence contract as run_until_done, with a compact
+            # registry line printed every N scheduler quanta
+            while sched.step():
+                if sched.steps > 100_000:
+                    raise RuntimeError("scheduler did not converge")
+                if sched.steps % args.metrics_every == 0:
+                    print(f"[q={sched.time}] {reg.line(prefix='sched')}")
+            done = sorted(sched.finished, key=lambda r: r.rid)
+        else:
+            done = sched.run_until_done()
     except KeyboardInterrupt:
         # graceful drain: cancel everything in flight, free its pages,
         # then fall through to the same stats + leak check as a full run
@@ -331,11 +362,18 @@ def _serve_paged(args, cfg, params, rng) -> None:
           f"{engine.nan_rescues}")
     if plan is not None:
         print(f"fault injection: {plan.stats()}")
-    print(f"prefill: {engine.prefill_tokens} tok in {engine.prefill_s:.2f}s "
-          f"({engine.prefill_tokens / max(engine.prefill_s, 1e-9):.1f} tok/s)"
-          f" | decode: {engine.decoded_tokens} tok in {engine.decode_s:.2f}s "
-          f"({engine.decoded_tokens / max(engine.decode_s, 1e-9):.1f} tok/s)"
+    # tok/s over DEVICE time (the jitted model calls + their sync), so the
+    # number measures the engine, not the scheduler; host/scheduler time is
+    # its own line instead of being smeared into throughput
+    pdev, ddev = engine.prefill_device_s, engine.decode_device_s
+    print(f"prefill: {engine.prefill_tokens} tok in {pdev:.2f}s device "
+          f"({engine.prefill_tokens / max(pdev, 1e-9):.1f} tok/s)"
+          f" | decode: {engine.decoded_tokens} tok in {ddev:.2f}s device "
+          f"({engine.decoded_tokens / max(ddev, 1e-9):.1f} tok/s)"
           f" (CPU interpret-scale)")
+    ovh = max(dt - pdev - ddev, 0.0)
+    print(f"overhead: scheduler+host {ovh:.2f}s of {dt:.2f}s wall "
+          f"({ovh / max(dt, 1e-9):.0%})")
     print(f"memory: weights {engine.weight_mib:.2f} MiB | paged kv pool "
           f"{engine.cache_mib:.2f} MiB "
           f"({engine.pool.tokens_capacity} pooled tokens)")
@@ -350,6 +388,20 @@ def _serve_paged(args, cfg, params, rng) -> None:
               f"({engine.decoded_tokens / max(engine.spec_steps, 1):.2f} "
               f"tok/step)")
     print("sample output:", done[0].output[:8])
+    if args.trace_out:
+        trace.dump(args.trace_out)
+        extra = f" ({trace.dropped} dropped)" if trace.dropped else ""
+        print(f"trace: {len(trace)} events -> {args.trace_out}{extra}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            if args.metrics_out.endswith(".prom"):
+                f.write(reg.to_prometheus())
+            else:
+                json.dump(reg.snapshot(), f, indent=1, sort_keys=True)
+        print(f"metrics: {len(reg)} series -> {args.metrics_out}")
+    if args.tune:
+        from repro.tune import tune_report
+        print(tune_report())
 
 
 def main():
@@ -432,10 +484,27 @@ def main():
     ap.add_argument("--fault-nan", type=float, default=0.0,
                     help="P(NaN-poisoned logits row) per emitted row "
                          "(exercises the NaN guard + decode-graph rescue)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="paged: record the run (request lifecycles, "
+                         "engine/scheduler spans) and write a Chrome "
+                         "trace-event JSON — load it in Perfetto or "
+                         "chrome://tracing")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="paged: write the metrics registry at exit — a "
+                         "JSON snapshot, or Prometheus text exposition when "
+                         "the path ends in .prom")
+    ap.add_argument("--metrics-every", type=int, default=None, metavar="N",
+                    help="paged: print a compact metrics line every N "
+                         "scheduler quanta")
     args = ap.parse_args()
     if args.spec_k and args.cache != "paged":
         ap.error("--spec-k needs --cache paged (the draft KV cache and "
                  "verify rollback are built on the page pool)")
+    if args.cache != "paged" and (args.trace_out or args.metrics_out
+                                  or args.metrics_every):
+        ap.error("--trace-out/--metrics-out/--metrics-every need --cache "
+                 "paged (the recorder hooks live in the scheduler/paged-"
+                 "engine stack)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -475,11 +544,15 @@ def main():
     print(f"served {args.requests} requests / {total_tokens} tokens in "
           f"{server.prefill_steps} prefill + {server.decode_steps} decode "
           f"model steps, {dt:.2f}s")
-    print(f"prefill: {server.prefill_tokens} tok in {server.prefill_s:.2f}s "
-          f"({server.prefill_tokens / max(server.prefill_s, 1e-9):.1f} tok/s)"
-          f" | decode: {server.decoded_tokens} tok in {server.decode_s:.2f}s "
-          f"({server.decoded_tokens / max(server.decode_s, 1e-9):.1f} tok/s)"
+    pdev, ddev = server.prefill_device_s, server.decode_device_s
+    print(f"prefill: {server.prefill_tokens} tok in {pdev:.2f}s device "
+          f"({server.prefill_tokens / max(pdev, 1e-9):.1f} tok/s)"
+          f" | decode: {server.decoded_tokens} tok in {ddev:.2f}s device "
+          f"({server.decoded_tokens / max(ddev, 1e-9):.1f} tok/s)"
           f" (CPU interpret-scale)")
+    ovh = max(dt - pdev - ddev, 0.0)
+    print(f"overhead: driver+host {ovh:.2f}s of {dt:.2f}s wall "
+          f"({ovh / max(dt, 1e-9):.0%})")
     print(f"memory: weights {server.weight_mib:.2f} MiB "
           f"(dense {server.weight_mib_dense:.2f} MiB, "
           f"{server.weight_mib_dense / max(server.weight_mib, 1e-9):.2f}x) | "
@@ -488,6 +561,9 @@ def main():
           f"{server.cache_mib_dense / max(server.cache_mib, 1e-9):.2f}x)")
     print("sample output:", server.completed[0][:8] if server.completed
           else server.outputs[0][:8])
+    if args.tune:
+        from repro.tune import tune_report
+        print(tune_report())
 
 
 if __name__ == "__main__":

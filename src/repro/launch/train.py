@@ -214,6 +214,9 @@ def main():
                       save_every=args.save_every, tune=args.tune,
                       quant=args.quant)
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    if args.tune:
+        from repro.tune import tune_report
+        print(tune_report())
 
 
 if __name__ == "__main__":

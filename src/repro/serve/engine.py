@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig, ATTN_GLOBAL, ATTN_LOCAL
+from repro.obs import ENGINE_TRACK, NULL_TRACER, Registry
 from repro.serve.paging import (BlockTables, DecodeFault, PagePool,
                                 PoolExhausted, pages_needed)
 
@@ -95,7 +96,8 @@ class PagedEngine:
                  tune: str | None = None, decode_backend: str | None = None,
                  moe_backend: str | None = None, quant: str | None = None,
                  kv_quant: str | None = None,
-                 max_prefixes: int | None = None):
+                 max_prefixes: int | None = None,
+                 metrics: Registry | None = None, trace=None):
         if cfg.is_encdec:
             raise NotImplementedError("PagedEngine: enc-dec models are not "
                                       "supported")
@@ -112,10 +114,12 @@ class PagedEngine:
             from repro.quant import quantize_params
             params, self.quant_report = quantize_params(
                 params, cfg.quant, group=cfg.quant_group)
+        self.obs = metrics if metrics is not None else Registry()
+        self.trace = trace if trace is not None else NULL_TRACER
         if tune:
             from repro.tune import warm_from_flag
             warm_from_flag(cfg, tune, seq=max_len, batch=slots,
-                           page_size=page_size)
+                           page_size=page_size, metrics=self.obs)
         self.cfg, self.params = cfg, params
         self.slots = int(slots)
         self.max_len = int(max_len)
@@ -137,12 +141,25 @@ class PagedEngine:
         self.max_prefixes = max_prefixes
         self.prefix_evictions = 0
 
-        self.prefill_steps = self.decode_steps = 0
-        self.prefill_tokens = self.decoded_tokens = 0
-        self.prefill_s = self.decode_s = 0.0
-        self.suspends = self.resumes = 0
-        self.swapped_out_tokens = 0     # cache rows carried across suspends
-        self.nan_rescues = 0            # decode blocks re-run by the guard
+        # engine counters live in the obs registry; the names below stay as
+        # read-only properties so benchmarks/tests read the same ints
+        o = self.obs
+        self._c_prefill_steps = o.counter("engine_prefill_steps_total")
+        self._c_decode_steps = o.counter("engine_decode_steps_total")
+        self._c_prefill_tokens = o.counter("engine_prefill_tokens_total")
+        self._c_decode_tokens = o.counter("engine_decode_tokens_total")
+        self._c_suspends = o.counter("engine_suspends_total")
+        self._c_resumes = o.counter("engine_resumes_total")
+        self._c_swapped_tokens = o.counter(
+            "engine_swapped_tokens_total",
+            "cache rows carried across suspends")
+        self._c_nan_rescues = o.counter(
+            "engine_nan_rescues_total", "decode blocks re-run by the guard")
+        # device-boundary timers: jitted call + block_until_ready ONLY (no
+        # host bookkeeping) — what the tok/s lines should divide by
+        self._c_prefill_dev = o.counter("engine_prefill_device_seconds_total")
+        self._c_decode_dev = o.counter("engine_decode_device_seconds_total")
+        self.prefill_s = self.decode_s = 0.0   # legacy whole-call timers
         self.fault_hook = None          # repro.serve.faults sets this
         self._attn_kinds = self._kind_flags(cfg)
         self._swap_page_bytes, self._swap_fixed_bytes = self._swap_layout()
@@ -159,6 +176,48 @@ class PagedEngine:
         period, _, tail = M._period(cfg)
         attn = (ATTN_GLOBAL, ATTN_LOCAL)
         return ([k in attn for k in period], [k in attn for k in tail])
+
+    # legacy counter names, now views over the obs registry ------------------
+
+    @property
+    def prefill_steps(self) -> int:
+        return self._c_prefill_steps.value
+
+    @property
+    def decode_steps(self) -> int:
+        return self._c_decode_steps.value
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._c_prefill_tokens.value
+
+    @property
+    def decoded_tokens(self) -> int:
+        return self._c_decode_tokens.value
+
+    @property
+    def suspends(self) -> int:
+        return self._c_suspends.value
+
+    @property
+    def resumes(self) -> int:
+        return self._c_resumes.value
+
+    @property
+    def swapped_out_tokens(self) -> int:
+        return self._c_swapped_tokens.value
+
+    @property
+    def nan_rescues(self) -> int:
+        return self._c_nan_rescues.value
+
+    @property
+    def prefill_device_s(self) -> float:
+        return self._c_prefill_dev.value
+
+    @property
+    def decode_device_s(self) -> float:
+        return self._c_decode_dev.value
 
     @property
     def page_size(self) -> int:
@@ -289,13 +348,15 @@ class PagedEngine:
             "tail": [None if attn else jax.tree.map(np.asarray, c)
                      for c, attn in zip(snap["tail"], tail_attn)],
         }
-        susp = Suspension(
-            n_tokens=n_tok, n_pages=len(pages), last=int(self.last[slot]),
-            remaining=int(self.remaining[slot]),
-            pages=self._gather_pages(pages), state=state)
+        with self.trace.span("swap.gather", "swap", slot,
+                             {"tokens": n_tok, "pages": len(pages)}):
+            susp = Suspension(
+                n_tokens=n_tok, n_pages=len(pages), last=int(self.last[slot]),
+                remaining=int(self.remaining[slot]),
+                pages=self._gather_pages(pages), state=state)
         self._drop(slot)
-        self.suspends += 1
-        self.swapped_out_tokens += n_tok
+        self._c_suspends.inc()
+        self._c_swapped_tokens.inc(n_tok)
         return susp
 
     def resume(self, slot: int, susp: Suspension) -> None:
@@ -307,18 +368,21 @@ class PagedEngine:
             raise RuntimeError(f"slot {slot} is already running")
         fresh = self.pool.alloc(susp.n_pages)   # raises, no side effects
         self.bt.append(slot, fresh)
-        self._scatter_pages(fresh, susp.pages)
-        self._slot_reset(slot)
-        self._slot_load(slot, susp.state)
+        with self.trace.span("swap.scatter", "swap", slot,
+                             {"tokens": susp.n_tokens,
+                              "pages": susp.n_pages}):
+            self._scatter_pages(fresh, susp.pages)
+            self._slot_reset(slot)
+            self._slot_load(slot, susp.state)
         self.active[slot] = True
         self.written[slot] = susp.n_tokens
         self.last[slot] = susp.last
         self.remaining[slot] = susp.remaining
-        self.resumes += 1
+        self._c_resumes.inc()
 
     # -- prefill ------------------------------------------------------------
 
-    def _run_prefill(self, slot: int, tokens, pos_start: int):
+    def _run_prefill(self, slot: int, tokens, pos_start: int, rid=None):
         """Chunked prefill of ``tokens`` into ``slot`` starting at row
         ``pos_start``; returns the final chunk's logits row."""
         mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
@@ -333,13 +397,18 @@ class PagedEngine:
             buf[slot] = piece
             pos0 = jnp.asarray(self.written, jnp.int32).at[slot].set(
                 pos_start + i)
-            logits, self.cache = self._prefill(
-                self.params, self.cache, jnp.asarray(buf), pos0, mask,
-                bt_dev)
-            self.prefill_steps += 1
-        jax.block_until_ready(logits)
+            with self.trace.span("prefill.chunk", "engine", slot,
+                                 {"rid": rid, "pos": pos_start + i,
+                                  "n": len(piece)}):
+                td = time.perf_counter()
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, jnp.asarray(buf), pos0, mask,
+                    bt_dev)
+                jax.block_until_ready(logits)
+                self._c_prefill_dev.inc(time.perf_counter() - td)
+            self._c_prefill_steps.inc()
         self.prefill_s += time.perf_counter() - t0
-        self.prefill_tokens += len(tokens)
+        self._c_prefill_tokens.inc(len(tokens))
         return logits[slot]
 
     # -- engine protocol ----------------------------------------------------
@@ -374,7 +443,8 @@ class PagedEngine:
         self._slot_reset(slot)
         if start:
             self._slot_load(slot, pre.state)
-        logits = self._run_prefill(slot, prompt[start:], start)
+        logits = self._run_prefill(slot, prompt[start:], start,
+                                   rid=getattr(req, "rid", None))
         first = int(jnp.argmax(logits))
         self.active[slot] = True
         self.written[slot] = len(prompt)
@@ -434,29 +504,36 @@ class PagedEngine:
         t0 = time.perf_counter()
 
         def launch():
+            td = time.perf_counter()
             toks, lgs, self.cache = self._decode_fn(n)(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.written, jnp.int32),
                 self._device_table(self.active))
+            jax.block_until_ready(lgs)
+            self._c_decode_dev.inc(time.perf_counter() - td)
             lg = np.asarray(lgs)
             if self.fault_hook is not None:
                 lg = self.fault_hook.corrupt_logits(lg, site="decode")
             return np.asarray(toks), lg
 
-        toks, lg = launch()
-        retries = 0
-        while np.isnan(lg[slots]).any():
-            retries += 1
-            if retries > 4:
-                self.decode_s += time.perf_counter() - t0
-                raise DecodeFault(
-                    f"non-finite logits persisted through {retries - 1} "
-                    f"rescue re-runs")
-            self.nan_rescues += 1
+        with self.trace.span("decode.block", "engine", ENGINE_TRACK,
+                             {"slots": len(slots), "n": n}):
             toks, lg = launch()
+            retries = 0
+            while np.isnan(lg[slots]).any():
+                retries += 1
+                if retries > 4:
+                    self.decode_s += time.perf_counter() - t0
+                    raise DecodeFault(
+                        f"non-finite logits persisted through {retries - 1} "
+                        f"rescue re-runs")
+                self._c_nan_rescues.inc()
+                self.trace.event("nan.rescue", "engine", ENGINE_TRACK,
+                                 {"retry": retries})
+                toks, lg = launch()
         self.decode_s += time.perf_counter() - t0
-        self.decode_steps += n
-        self.decoded_tokens += n * len(slots)
+        self._c_decode_steps.inc(n)
+        self._c_decode_tokens.inc(n * len(slots))
         out = {}
         for s in slots:
             out[s] = [int(v) for v in toks[s]]

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import ENGINE_TRACK, NULL_TRACER, Registry
 from repro.serve.paging import DecodeFault, PoolExhausted
 
 
@@ -44,11 +45,16 @@ class FaultPlan:
     one logits row).  ``max_faults`` bounds the total injections so a hot
     plan cannot livelock a request past the scheduler's retry budgets —
     after the bound, the plan goes quiet and the run completes.
+
+    Injection counts live in an obs Registry (``metrics=``, or a private
+    one); the ``admit_faults``/``growth_faults``/``transient_faults``/
+    ``nan_rows`` names are read-only views and ``stats()`` reads them.
     """
 
     def __init__(self, seed: int, *, p_admit: float = 0.0,
                  p_growth: float = 0.0, p_transient: float = 0.0,
-                 p_nan: float = 0.0, max_faults: int | None = 50):
+                 p_nan: float = 0.0, max_faults: int | None = 50,
+                 metrics: Registry | None = None, trace=None):
         for name, p in (("p_admit", p_admit), ("p_growth", p_growth),
                         ("p_transient", p_transient), ("p_nan", p_nan)):
             if not 0.0 <= p <= 1.0:
@@ -60,10 +66,28 @@ class FaultPlan:
         self.p_transient = p_transient
         self.p_nan = p_nan
         self.max_faults = max_faults
-        self.admit_faults = 0
-        self.growth_faults = 0
-        self.transient_faults = 0
-        self.nan_rows = 0
+        self.metrics = metrics if metrics is not None else Registry()
+        self.trace = trace if trace is not None else NULL_TRACER
+        self._c_admit = self.metrics.counter("fault_admit_total")
+        self._c_growth = self.metrics.counter("fault_growth_total")
+        self._c_transient = self.metrics.counter("fault_transient_total")
+        self._c_nan = self.metrics.counter("fault_nan_rows_total")
+
+    @property
+    def admit_faults(self) -> int:
+        return self._c_admit.value
+
+    @property
+    def growth_faults(self) -> int:
+        return self._c_growth.value
+
+    @property
+    def transient_faults(self) -> int:
+        return self._c_transient.value
+
+    @property
+    def nan_rows(self) -> int:
+        return self._c_nan.value
 
     @property
     def total(self) -> int:
@@ -82,17 +106,23 @@ class FaultPlan:
 
     def on_admit(self) -> None:
         if self._fire(self.p_admit):
-            self.admit_faults += 1
+            self._c_admit.inc()
+            self.trace.event("fault.inject", "fault", ENGINE_TRACK,
+                             {"site": "admit"})
             raise PoolExhausted(
                 f"[injected seed={self.seed}] admit allocation failure")
 
     def on_decode(self) -> None:
         if self._fire(self.p_growth):
-            self.growth_faults += 1
+            self._c_growth.inc()
+            self.trace.event("fault.inject", "fault", ENGINE_TRACK,
+                             {"site": "growth"})
             raise PoolExhausted(
                 f"[injected seed={self.seed}] page growth failure")
         if self._fire(self.p_transient):
-            self.transient_faults += 1
+            self._c_transient.inc()
+            self.trace.event("fault.inject", "fault", ENGINE_TRACK,
+                             {"site": "transient"})
             raise DecodeFault(
                 f"[injected seed={self.seed}] transient decode fault")
 
@@ -108,7 +138,9 @@ class FaultPlan:
             if not lg.flags.writeable:    # np.asarray of a device array
                 lg = lg.copy()
             lg.reshape(-1, lg.shape[-1])[hit] = np.nan
-            self.nan_rows += int(hit.sum())
+            self._c_nan.inc(int(hit.sum()))
+            self.trace.event("fault.inject", "fault", ENGINE_TRACK,
+                             {"site": site, "rows": int(hit.sum())})
         return lg
 
     def stats(self) -> dict:
@@ -132,6 +164,8 @@ class FaultyEngine:
         self._engine = engine
         self.plan = plan
         engine.fault_hook = plan
+        if not plan.trace and getattr(engine, "trace", None):
+            plan.trace = engine.trace   # fault events land in the run trace
 
     def admit(self, slot, request):
         self.plan.on_admit()

@@ -216,18 +216,49 @@ class SwapStore:
 
     Invariant (check()): ``used_bytes`` equals the sum of the stored
     entries' sizes, and never exceeds the budget.
+
+    Counters live in an ``repro.obs`` Registry (``metrics=``, or a private
+    one) — the historical ``swapped_out``/``swapped_in``/``dropped``/
+    ``refused`` attributes are read-only views over it.
     """
 
-    def __init__(self, budget_bytes: int | None = None):
+    def __init__(self, budget_bytes: int | None = None, metrics=None):
         if budget_bytes is not None and budget_bytes < 0:
             raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        if metrics is None:
+            from repro.obs import Registry
+            metrics = Registry()
         self.budget_bytes = budget_bytes
         self._entries: dict[int, tuple] = {}    # rid -> (susp, nbytes)
-        self.used_bytes = 0
-        self.swapped_out = 0        # lifetime puts
-        self.swapped_in = 0         # lifetime pops (resumes)
-        self.dropped = 0            # cancelled while suspended
-        self.refused = 0            # policy said recompute (over budget)
+        self.metrics = metrics
+        self._out = metrics.counter("swap_out_total", "lifetime puts")
+        self._in = metrics.counter("swap_in_total", "lifetime pops (resumes)")
+        self._drop = metrics.counter("swap_dropped_total",
+                                     "cancelled while suspended")
+        self._refuse = metrics.counter(
+            "swap_refused_total", "policy said recompute (over budget)")
+        self._used = metrics.gauge("swap_used_bytes", "host bytes held")
+        self._used.set(0)
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used.value
+
+    @property
+    def swapped_out(self) -> int:
+        return self._out.value
+
+    @property
+    def swapped_in(self) -> int:
+        return self._in.value
+
+    @property
+    def dropped(self) -> int:
+        return self._drop.value
+
+    @property
+    def refused(self) -> int:
+        return self._refuse.value
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -241,15 +272,15 @@ class SwapStore:
         ok = self.budget_bytes is None \
             or self.used_bytes + nbytes <= self.budget_bytes
         if not ok:
-            self.refused += 1
+            self._refuse.inc()
         return ok
 
     def put(self, rid: int, susp, nbytes: int) -> None:
         if rid in self._entries:
             raise ValueError(f"request {rid} is already swapped out")
         self._entries[rid] = (susp, int(nbytes))
-        self.used_bytes += int(nbytes)
-        self.swapped_out += 1
+        self._used.inc(int(nbytes))
+        self._out.inc()
 
     def peek(self, rid: int):
         """The stored suspension, NOT removed — resume may still fail with
@@ -259,15 +290,15 @@ class SwapStore:
     def pop(self, rid: int):
         """Remove after a successful resume."""
         susp, nbytes = self._entries.pop(rid)
-        self.used_bytes -= nbytes
-        self.swapped_in += 1
+        self._used.dec(nbytes)
+        self._in.inc()
         return susp
 
     def drop(self, rid: int) -> None:
         """Discard a suspension whose request was cancelled/failed."""
         _, nbytes = self._entries.pop(rid)
-        self.used_bytes -= nbytes
-        self.dropped += 1
+        self._used.dec(nbytes)
+        self._drop.inc()
 
     def check(self) -> None:
         assert self.used_bytes == sum(n for _, n in self._entries.values())

@@ -51,10 +51,12 @@ in flight terminates CANCELLED with partial output kept and pages freed.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any
 
+from repro.obs import NULL_TRACER, QUANTA_BUCKETS, Registry, SCHED_TRACK
 from repro.serve.paging import (DecodeFault, PoolExhausted, SwapStore,
                                 pages_needed)
 
@@ -98,6 +100,8 @@ class Request:
     submitted_at: int = 0
     enqueued_at: int = 0
     admit_failures: int = 0
+    submitted_wall: float = 0.0   # perf_counter at submit (TTFT histogram)
+    first_tok_wall: float | None = None
 
     @property
     def key(self):
@@ -123,7 +127,8 @@ class Scheduler:
                  host_swap_bytes: int | None = None,
                  max_waiting: int | None = None,
                  max_admit_retries: int = 8,
-                 max_decode_faults: int = 16):
+                 max_decode_faults: int = 16,
+                 metrics: Registry | None = None, trace=None):
         self.engine = engine
         self.waiting: list[Request] = []
         self.running: dict[int, Request] = {}   # slot -> request
@@ -134,11 +139,46 @@ class Scheduler:
         self.max_waiting = max_waiting
         self.max_admit_retries = max_admit_retries
         self.max_decode_faults = max_decode_faults
-        self.swap = SwapStore(host_swap_bytes)
+        self.obs = metrics if metrics is not None else Registry()
+        self.trace = trace if trace is not None else NULL_TRACER
+        self.swap = SwapStore(host_swap_bytes, metrics=self.obs)
         self.steps = 0
         self.time = 0                  # scheduler clock, one tick per step()
-        self.decode_faults = 0
         self._consecutive_faults = 0
+        o = self.obs
+        self._m_submitted = o.counter("sched_submitted_total")
+        self._m_preempt = o.counter("sched_preemptions_total",
+                                    "evictions of either kind")
+        self._m_evict = {
+            "swap": o.counter("sched_evictions_total", policy="swap"),
+            "recompute": o.counter("sched_evictions_total",
+                                   policy="recompute")}
+        self._m_faults = o.counter("sched_decode_faults_total",
+                                   "transient decode faults retried")
+        self._m_quanta = o.counter("sched_quanta_total")
+        self._m_terminal = {s: o.counter("sched_requests_total",
+                                         state=s.value) for s in TERMINAL}
+        self._g_waiting = o.gauge("sched_waiting")
+        self._g_running = o.gauge("sched_running")
+        self._g_free_pages = o.gauge(
+            "engine_free_pages", "free pool pages (lo = high-water usage)") \
+            if hasattr(engine, "free_pages") else None
+        self._h_queue_wait = o.histogram("sched_queue_wait_quanta",
+                                         QUANTA_BUCKETS,
+                                         "quanta from enqueue to admission")
+        self._h_ttft = o.histogram("sched_ttft_seconds", help="wall seconds "
+                                   "from submit to first output token")
+        self._h_intertok = o.histogram(
+            "sched_intertoken_seconds",
+            help="wall seconds per emitted token, per slot, per quantum")
+        self._h_swap_rt = o.histogram(
+            "sched_swap_roundtrip_seconds",
+            help="wall seconds from suspend to successful resume")
+        self._suspend_wall: dict[int, float] = {}   # rid -> suspend time
+
+    @property
+    def decode_faults(self) -> int:
+        return self._m_faults.value
 
     # -- submission ----------------------------------------------------------
 
@@ -160,9 +200,12 @@ class Scheduler:
         req = Request(rid=self._rid, prompt=list(prompt), gen=int(gen),
                       prefix=prefix, arrival=self._clock, deadline=deadline,
                       max_queue_wait=max_queue_wait, submitted_at=self.time,
-                      enqueued_at=self.time)
+                      enqueued_at=self.time, submitted_wall=time.perf_counter())
         self._rid += 1
         self._clock += 1
+        self._m_submitted.inc()
+        self.trace.lifecycle(req.rid, "QUEUED",
+                             {"prompt": len(req.prompt), "gen": req.gen})
         if self.max_waiting is not None \
                 and len(self.waiting) >= self.max_waiting:
             # backpressure: shed load LOUDLY instead of queueing unboundedly
@@ -188,10 +231,14 @@ class Scheduler:
     def _terminate(self, req: Request, state: State, error=None) -> None:
         if req.rid in self.swap:
             self.swap.drop(req.rid)
+            self._suspend_wall.pop(req.rid, None)
         req.state = state
         if error is not None:
             req.error = error
         self.finished.append(req)
+        self._m_terminal[state].inc()
+        self.trace.lifecycle(req.rid, state.name,
+                             {"tokens": len(req.output)})
 
     @property
     def completed(self) -> list[Request]:
@@ -247,6 +294,10 @@ class Scheduler:
                         break
                     continue
                 self.swap.pop(req.rid)
+                t_susp = self._suspend_wall.pop(req.rid, None)
+                if t_susp is not None:
+                    self._h_swap_rt.observe(time.perf_counter() - t_susp)
+                self.trace.lifecycle(req.rid, "RESUMED", {"slot": slot})
             else:
                 try:
                     first = self.engine.admit(slot, req)
@@ -256,10 +307,18 @@ class Scheduler:
                     continue
                 if first is not None:
                     req.output.append(int(first))
+                    self._first_token(req)
+                self.trace.lifecycle(req.rid, "ADMITTED", {"slot": slot})
+            self._h_queue_wait.observe(self.time - req.enqueued_at)
             req.state = State.RUNNING
             req.admit_failures = 0
             self.running[slot] = req
             self.waiting.pop(0)
+
+    def _first_token(self, req: Request) -> None:
+        if req.first_tok_wall is None:
+            req.first_tok_wall = time.perf_counter()
+            self._h_ttft.observe(req.first_tok_wall - req.submitted_wall)
 
     def _preempt_youngest(self) -> None:
         """Evict the youngest running request — swap when it fits the host
@@ -276,16 +335,22 @@ class Scheduler:
                 f"evicted {req.preemptions} times — livelock (pool too "
                 f"small for the running set?)")
             return
+        self._m_preempt.inc()
         if hasattr(self.engine, "suspend") \
                 and self.swap.fits(self.engine.suspend_bytes(slot)):
             susp = self.engine.suspend(slot)
             self.swap.put(req.rid, susp, getattr(susp, "nbytes", 0))
+            self._suspend_wall[req.rid] = time.perf_counter()
             req.state = State.SUSPENDED
             req.swaps += 1
+            self._m_evict["swap"].inc()
+            self.trace.lifecycle(req.rid, "SUSPENDED", {"slot": slot})
         else:
             self.engine.preempt(slot)
             req.state = State.PREEMPTED
             req.output = []
+            self._m_evict["recompute"].inc()
+            self.trace.lifecycle(req.rid, "PREEMPTED", {"slot": slot})
         del self.running[slot]
         req.enqueued_at = self.time
         self.waiting.append(req)   # key() keeps original arrival order
@@ -329,6 +394,17 @@ class Scheduler:
         """One scheduling quantum: expire, admit, decode, retire. Returns
         True while any work remains."""
         self.time += 1
+        self.trace.quantum = self.time   # everything this step inherits it
+        with self.trace.span("sched.quantum", "sched", SCHED_TRACK):
+            more = self._step()
+        self._m_quanta.inc()
+        self._g_waiting.set(len(self.waiting))
+        self._g_running.set(len(self.running))
+        if self._g_free_pages is not None:
+            self._g_free_pages.set(self.engine.free_pages)
+        return more
+
+    def _step(self) -> bool:
         self._expire()
         self._admit_waiting()
         self._retire()                      # a gen==1 request ends at admit
@@ -337,7 +413,9 @@ class Scheduler:
         self.steps += 1
         while True:
             try:
+                t0 = time.perf_counter()
                 new = self.engine.decode(sorted(self.running))
+                dt = time.perf_counter() - t0
                 self._consecutive_faults = 0
                 break
             except PoolExhausted:
@@ -347,7 +425,7 @@ class Scheduler:
             except DecodeFault as e:
                 # transient, no cursor advanced — retry the quantum, but
                 # give up loudly if the "transient" fault never clears
-                self.decode_faults += 1
+                self._m_faults.inc()
                 self._consecutive_faults += 1
                 if self._consecutive_faults > self.max_decode_faults:
                     raise RuntimeError(
@@ -355,7 +433,11 @@ class Scheduler:
                         f"faults — not transient: {e}") from e
                 return True
         for slot, toks in new.items():
-            self.running[slot].output.extend(int(t) for t in toks)
+            req = self.running[slot]
+            req.output.extend(int(t) for t in toks)
+            if toks:
+                self._first_token(req)
+                self._h_intertok.observe(dt / len(toks))
         self._retire()
         return bool(self.waiting or self.running)
 

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig, ATTN_GLOBAL, ATTN_LOCAL
+from repro.obs import ENGINE_TRACK
 from repro.serve.engine import PagedEngine
 from repro.serve.paging import pages_needed
 
@@ -95,7 +96,7 @@ class SpecPagedEngine(PagedEngine):
             from repro.tune import warm_from_flag
             warm_from_flag(self.cfg, tune, seq=self.max_len,
                            batch=self.slots, page_size=self.page_size,
-                           spec_k=spec_k)
+                           spec_k=spec_k, metrics=self.obs)
         bad = [k for k in self.cfg.layer_kinds()
                if k not in (ATTN_GLOBAL, ATTN_LOCAL)]
         if bad:
@@ -132,11 +133,17 @@ class SpecPagedEngine(PagedEngine):
         self._swap_page_bytes, self._swap_fixed_bytes = self._swap_layout()
 
         self.tie_tau = float(tie_tau)
-        self.drafted = 0            # draft tokens offered to verify
-        self.accepted = 0           # draft tokens accepted
-        self.spec_steps = 0
-        self.rescue_steps = 0       # steps that needed a decode-graph rescue
-        self.nan_rows = 0           # verify rows voided by the NaN guard
+        o = self.obs
+        self._c_drafted = o.counter("spec_drafted_total",
+                                    "draft tokens offered to verify")
+        self._c_accepted = o.counter("spec_accepted_total",
+                                     "draft tokens accepted")
+        self._c_spec_steps = o.counter("spec_steps_total")
+        self._c_rescues = o.counter(
+            "spec_rescue_steps_total",
+            "steps that needed a decode-graph rescue")
+        self._c_nan_rows = o.counter(
+            "spec_nan_rows_total", "verify rows voided by the NaN guard")
         dcfg = self.draft_cfg
         self._draft_prefill_fn = jax.jit(
             lambda p, c, t, po, m, bt: M.lm_prefill(
@@ -147,6 +154,26 @@ class SpecPagedEngine(PagedEngine):
             lambda p, c, t, po, vl, bt: M.lm_verify_step(
                 p, c, t, po, tcfg, block_table=bt, valid_len=vl))
         self._draft_fns: dict[int, Any] = {}
+
+    @property
+    def drafted(self) -> int:
+        return self._c_drafted.value
+
+    @property
+    def accepted(self) -> int:
+        return self._c_accepted.value
+
+    @property
+    def spec_steps(self) -> int:
+        return self._c_spec_steps.value
+
+    @property
+    def rescue_steps(self) -> int:
+        return self._c_rescues.value
+
+    @property
+    def nan_rows(self) -> int:
+        return self._c_nan_rows.value
 
     @property
     def acceptance_rate(self) -> float:
@@ -286,15 +313,20 @@ class SpecPagedEngine(PagedEngine):
         # writing draft rows written..written+keff — the draft cache ends
         # one row AHEAD of the accepted prefix in the all-accept case and
         # exactly at it after a rollback, both equal to new_written
-        drafts, self.draft_cache = self._draft_fn(kpad + 1)(
-            self.draft_params, self.draft_cache, last_dev, pos0, keff_dev,
-            bt_dev)
+        with self.trace.span("verify.pass", "engine", ENGINE_TRACK,
+                             {"slots": len(slots), "k": kpad}):
+            td = time.perf_counter()
+            drafts, self.draft_cache = self._draft_fn(kpad + 1)(
+                self.draft_params, self.draft_cache, last_dev, pos0,
+                keff_dev, bt_dev)
 
-        # verify all K+1 positions in ONE short-q pass: row t scores
-        # position written+t+1 given [prompt..., last, d_1..d_t]
-        vtok = jnp.concatenate([last_dev, drafts[:, :kpad]], axis=1)
-        logits, self.cache = self._verify_fn(
-            self.params, self.cache, vtok, pos0, keff_dev + 1, bt_dev)
+            # verify all K+1 positions in ONE short-q pass: row t scores
+            # position written+t+1 given [prompt..., last, d_1..d_t]
+            vtok = jnp.concatenate([last_dev, drafts[:, :kpad]], axis=1)
+            logits, self.cache = self._verify_fn(
+                self.params, self.cache, vtok, pos0, keff_dev + 1, bt_dev)
+            jax.block_until_ready(logits)
+            self._c_decode_dev.inc(time.perf_counter() - td)
         lg = np.asarray(logits, np.float32)              # (slots, kpad+1, V)
         if self.fault_hook is not None:
             lg = self.fault_hook.corrupt_logits(lg, site="verify")
@@ -309,11 +341,15 @@ class SpecPagedEngine(PagedEngine):
         # over when nothing else would emit.  That is the whole fault story:
         # no token derived from a poisoned row can ever be emitted.
         finite = np.isfinite(lg).all(-1)
-        self.nan_rows += int((~finite[np.asarray(slots)]).sum())
+        voided = int((~finite[np.asarray(slots)]).sum())
+        if voided:
+            self._c_nan_rows.inc(voided)
+            self.trace.event("nan.voided", "engine", ENGINE_TRACK,
+                             {"rows": voided})
         clear &= finite
         drafts = np.asarray(drafts)
-        self.decode_steps += 1
-        self.spec_steps += 1
+        self._c_decode_steps.inc()
+        self._c_spec_steps.inc()
 
         out = {}
         rescue = []
@@ -329,8 +365,8 @@ class SpecPagedEngine(PagedEngine):
             # (the rescue below, or simply the next step)
             emitted = [int(g[j]) for j in range(n_acc + (1 if ok[n_acc]
                                                          else 0))]
-            self.drafted += k
-            self.accepted += n_acc
+            self._c_drafted.inc(k)
+            self._c_accepted.inc(n_acc)
             if not emitted:
                 # keep the page holding row `written`: the rescue pass
                 # scatters there and emits exactly one token
@@ -347,7 +383,7 @@ class SpecPagedEngine(PagedEngine):
             self.written[s] = new_written
             self.last[s] = emitted[-1]
             self.remaining[s] -= len(emitted)
-            self.decoded_tokens += len(emitted)
+            self._c_decode_tokens.inc(len(emitted))
             out[s] = emitted
 
         if rescue:
@@ -358,13 +394,18 @@ class SpecPagedEngine(PagedEngine):
             # scatter lands on their next row (correct token, overwritten
             # by the next verify) or the null page, and their logits are
             # discarded.
-            self.rescue_steps += 1
+            self._c_rescues.inc()
             tokens = np.zeros((self.slots, 1), np.int32)
             tokens[slots, 0] = self.last[slots]
-            toks, _, self.cache = self._decode_fn(1)(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(self.written, jnp.int32),
-                self._device_table(self.active))
+            with self.trace.span("decode.rescue", "engine", ENGINE_TRACK,
+                                 {"slots": len(rescue)}):
+                td = time.perf_counter()
+                toks, _, self.cache = self._decode_fn(1)(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.written, jnp.int32),
+                    self._device_table(self.active))
+                jax.block_until_ready(toks)
+                self._c_decode_dev.inc(time.perf_counter() - td)
             toks = np.asarray(toks)
             for s in rescue:
                 tok = int(toks[s, 0])
@@ -372,6 +413,6 @@ class SpecPagedEngine(PagedEngine):
                 self.written[s] += 1
                 self.last[s] = tok
                 self.remaining[s] -= 1
-                self.decoded_tokens += 1
+                self._c_decode_tokens.inc()
         self.decode_s += time.perf_counter() - t0
         return out

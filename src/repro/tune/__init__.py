@@ -10,13 +10,13 @@ from repro.tune.cache import (CACHE_VERSION, ENV_VAR, KernelSpec,
                               TuningCache, default_cache, default_cache_path)
 from repro.tune.search import (Candidate, TuneResult, autotune,
                                enumerate_candidates, model_cost, search)
-from repro.tune.warm import (TUNE_CHOICES, wall_measurer, warm_for_model,
-                             warm_from_flag)
+from repro.tune.warm import (TUNE_CHOICES, tune_report, wall_measurer,
+                             warm_for_model, warm_from_flag)
 
 __all__ = [
     "CACHE_VERSION", "ENV_VAR", "KernelSpec", "TuningCache",
     "default_cache", "default_cache_path",
     "Candidate", "TuneResult", "autotune", "enumerate_candidates",
-    "model_cost", "search", "TUNE_CHOICES", "wall_measurer",
+    "model_cost", "search", "TUNE_CHOICES", "tune_report", "wall_measurer",
     "warm_for_model", "warm_from_flag",
 ]

@@ -91,13 +91,25 @@ class TuningCache:
     tell a modeled prior from a measured result.
     """
 
-    def __init__(self, path: Optional[str] = None, autoload: bool = True):
+    def __init__(self, path: Optional[str] = None, autoload: bool = True,
+                 metrics=None):
         self.path = path or default_cache_path()
         self.entries: dict[str, dict] = {}
-        self.stats = {"hits": 0, "misses": 0}
+        if metrics is None:
+            from repro.obs import Registry
+            metrics = Registry()
+        self.metrics = metrics
+        self._c_hits = metrics.counter("tune_cache_hits_total")
+        self._c_misses = metrics.counter("tune_cache_misses_total")
         self._warned_unwritable = False
         if autoload:
             self.load()
+
+    @property
+    def stats(self) -> dict:
+        """Hit/miss counts, historically a plain dict — now a view over the
+        obs registry counters."""
+        return {"hits": self._c_hits.value, "misses": self._c_misses.value}
 
     def load(self) -> None:
         try:
@@ -131,9 +143,9 @@ class TuningCache:
     def get(self, spec: KernelSpec) -> Optional[CoarseningConfig]:
         e = self.entries.get(spec.key)
         if e is None:
-            self.stats["misses"] += 1
+            self._c_misses.inc()
             return None
-        self.stats["hits"] += 1
+        self._c_hits.inc()
         return CoarseningConfig.parse(e["cfg"])
 
     def put(self, spec: KernelSpec, cfg: CoarseningConfig, *,

@@ -429,9 +429,15 @@ def autotune(spec: KernelSpec, *,
              cache: Optional[TuningCache] = None,
              measure: Optional[Callable] = None,
              strategy: str = "model",
+             on_result: Optional[Callable] = None,
              **search_kw) -> CoarseningConfig:
     """Cache-through search: return the winning config for `spec`, searching
-    only on a cache miss and persisting the winner."""
+    only on a cache miss and persisting the winner.
+
+    ``on_result(res)`` fires with the full TuneResult on every cache miss —
+    the tuner-telemetry hook (warm.py aggregates modeled-vs-measured
+    calibration per family from it).  Cache hits carry no candidate list,
+    so they do not fire."""
     if cache is None:
         cache = default_cache()
     hit = cache.get(spec)
@@ -441,4 +447,6 @@ def autotune(spec: KernelSpec, *,
     best = res.candidates[0]
     cache.put(spec, res.best, modeled_s=best.modeled_s,
               measured_s=best.measured_s, source=res.source)
+    if on_result is not None:
+        on_result(res)
     return res.best

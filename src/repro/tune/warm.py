@@ -9,6 +9,7 @@ Mosaic-lowered kernel — see ROADMAP Open items).
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Optional
 
@@ -24,11 +25,21 @@ def _round_down(n: int, q: int) -> int:
 # alias for the modeled prior
 TUNE_CHOICES = ("auto", "model", "greedy", "exhaustive")
 
+# log(measured / modeled) buckets for the calibration histogram: 0 = the
+# model is perfectly calibrated, +-0.7 ~ a 2x miss
+RESIDUAL_BUCKETS = (-2.0, -1.0, -0.5, -0.25, -0.1, 0.0, 0.1, 0.25, 0.5,
+                    1.0, 2.0)
+
+# per-family calibration from the most recent measured warms in this
+# process (accumulates across warm_for_model calls — the serve driver warms
+# the target engine and then the spec engine); tune_report() formats it
+LAST_CALIBRATION: dict[str, dict] = {}
+
 
 def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
                    cache: Optional[TuningCache] = None,
                    page_size: Optional[int] = None,
-                   spec_k: Optional[int] = None) -> dict:
+                   spec_k: Optional[int] = None, metrics=None) -> dict:
     """The launch drivers' --tune entry point: map the flag value to a
     (strategy, measurer) pair and warm the cache."""
     if tune not in TUNE_CHOICES:
@@ -37,7 +48,66 @@ def warm_from_flag(cfg, tune: str, *, seq: int, batch: int,
     strategy = "model" if tune == "auto" else tune
     return warm_for_model(cfg, seq=seq, batch=batch, cache=cache,
                           measure=measure, strategy=strategy,
-                          page_size=page_size, spec_k=spec_k)
+                          page_size=page_size, spec_k=spec_k,
+                          metrics=metrics)
+
+
+def _calibration(res) -> Optional[dict]:
+    """Model-vs-measured agreement for one TuneResult: pairwise rank
+    concordance (Kendall-style, ties skipped), top-1 pick match, and
+    log(measured/modeled) residuals.  None when fewer than two candidates
+    carry a measurement (nothing to rank)."""
+    meas = [c for c in res.candidates if c.measured_s is not None
+            and c.measured_s > 0 and c.modeled_s > 0]
+    if len(meas) < 2:
+        return None
+    pairs = agree = 0
+    for i in range(len(meas)):
+        for j in range(i + 1, len(meas)):
+            a, b = meas[i], meas[j]
+            if a.modeled_s == b.modeled_s or a.measured_s == b.measured_s:
+                continue
+            pairs += 1
+            agree += int((a.modeled_s < b.modeled_s)
+                         == (a.measured_s < b.measured_s))
+    model_pick = min(meas, key=lambda c: c.modeled_s)
+    meas_pick = min(meas, key=lambda c: c.measured_s)
+    resid = sorted(math.log(c.measured_s / c.modeled_s) for c in meas)
+    return {
+        "n_measured": len(meas),
+        "rank_agreement": round(agree / pairs, 3) if pairs else 1.0,
+        "top1_match": model_pick.cfg.label == meas_pick.cfg.label,
+        "model_pick": model_pick.cfg.label,
+        "measured_pick": meas_pick.cfg.label,
+        "residuals": [round(r, 3) for r in resid],
+        "residual_median": round(resid[len(resid) // 2], 3),
+    }
+
+
+def tune_report(cache: Optional[TuningCache] = None) -> str:
+    """The --tune exit summary: cache hit/miss counts plus the per-family
+    model-vs-measured calibration collected by this process's warms."""
+    cache = cache or default_cache()
+    st = cache.stats
+    lines = [f"tune: cache {st['hits']} hits / {st['misses']} misses "
+             f"({len(cache)} entries at {cache.path})"]
+    if not LAST_CALIBRATION:
+        lines.append("tune: calibration n/a — no family measured this run "
+                     "(cache hits, or --tune auto/model which never "
+                     "measures)")
+        return "\n".join(lines)
+    lines.append("tune: model-vs-measured calibration "
+                 "(rank agreement over measured candidates; residual = "
+                 "median log(measured/modeled), 0 is perfect):")
+    for fam in sorted(LAST_CALIBRATION):
+        c = LAST_CALIBRATION[fam]
+        pick = "top-1 MATCH" if c["top1_match"] else (
+            f"top-1 MISS (model {c['model_pick']} vs measured "
+            f"{c['measured_pick']})")
+        lines.append(f"tune:   {fam}: rank {c['rank_agreement']:.0%} over "
+                     f"{c['n_measured']} measured, {pick}, residual "
+                     f"{c['residual_median']:+.3f}")
+    return "\n".join(lines)
 
 
 def warm_for_model(cfg, *, seq: int, batch: int,
@@ -45,9 +115,14 @@ def warm_for_model(cfg, *, seq: int, batch: int,
                    measure=None, strategy: str = "model",
                    verbose: bool = True,
                    page_size: Optional[int] = None,
-                   spec_k: Optional[int] = None) -> dict:
+                   spec_k: Optional[int] = None, metrics=None) -> dict:
     """Autotune the kernel families a model step exercises; returns
-    {family: winning-label}.  cfg is a repro.models.config.ModelConfig."""
+    {family: winning-label}.  cfg is a repro.models.config.ModelConfig.
+
+    With ``metrics`` (an obs Registry), each measured family's calibration
+    lands in ``tune_rank_agreement{family=...}`` / ``tune_top1_match`` /
+    the ``tune_residual_logratio`` histogram, and in LAST_CALIBRATION for
+    tune_report()."""
     cache = cache or default_cache()
     toks = batch * seq
     d = cfg.d_model
@@ -179,9 +254,10 @@ def warm_for_model(cfg, *, seq: int, batch: int,
                 window=0, **({"kv_bits": 8} if kv_q else {}))
     out = {}
     for fam, spec in specs.items():
+        results = []
         try:
             best = autotune(spec, cache=cache, measure=measure,
-                            strategy=strategy)
+                            strategy=strategy, on_result=results.append)
         except ValueError as e:          # geometry too small to coarsen
             if verbose:
                 print(f"tune: {fam}: skipped ({e})")
@@ -189,6 +265,19 @@ def warm_for_model(cfg, *, seq: int, batch: int,
         out[fam] = best.label
         if verbose:
             print(f"tune: {fam} {spec.shape} -> {best.label}")
+        cal = _calibration(results[0]) if results else None
+        if cal is not None:
+            LAST_CALIBRATION[fam] = cal
+            if metrics is not None:
+                metrics.gauge("tune_rank_agreement",
+                              family=fam).set(cal["rank_agreement"])
+                metrics.gauge("tune_top1_match",
+                              family=fam).set(int(cal["top1_match"]))
+                h = metrics.histogram("tune_residual_logratio",
+                                      RESIDUAL_BUCKETS,
+                                      "log(measured_s / modeled_s)")
+                for r in cal["residuals"]:
+                    h.observe(r)
     return out
 
 
